@@ -1,0 +1,66 @@
+"""Kernel micro-bench: XLA fallback path wall-time (CPU; per-call us) plus
+analytic VMEM working-set / HBM-traffic derivations for the Pallas kernels
+(the TPU numbers in EXPERIMENTS.md §Perf are derived, not timed — CPU
+interpret-mode timings of Pallas are meaningless and are not reported).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import chunked_attention, decode_attention
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(csv: List[str]) -> None:
+    key = jax.random.PRNGKey(0)
+    # prefill attention (XLA chunked path)
+    B, S, Hq, Hkv, D = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, S, Hq, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: chunked_attention(q, k, v, q_block=256))
+    us = _time(fn, q, k, v)
+    flops = 4 * B * S * S * Hq * D / 2  # causal
+    csv.append(f"kernels/prefill_attn_xla_2k,{us:.1f},"
+               f"gflops_cpu={flops/us/1e3:.2f}")
+    # flash kernel derived numbers (TPU target): VMEM tiles + HBM traffic
+    bq = bk = 128
+    vmem = (bq * D + 2 * bk * D + bq * D + 2 * bq) * 4
+    hbm_flash = (S * Hq * D + 2 * S * Hkv * D + S * Hq * D) * 2
+    hbm_xla = hbm_flash + 2 * B * Hq * S * S * 4 / 2  # + materialised scores
+    csv.append(f"kernels/flash_attn_derived,0.0,"
+               f"vmem_per_block_kb={vmem/1024:.0f};"
+               f"hbm_bytes_flash={hbm_flash:.3g};hbm_bytes_xla={hbm_xla:.3g};"
+               f"traffic_reduction={hbm_xla/hbm_flash:.1f}x")
+
+    # decode attention over a 32k cache
+    C = 32768
+    qd = jax.random.normal(key, (4, Hq, D), jnp.bfloat16)
+    kc = jax.random.normal(key, (4, C, Hkv, D), jnp.bfloat16)
+    vc = jax.random.normal(key, (4, C, Hkv, D), jnp.bfloat16)
+    fn = jax.jit(lambda q, kc, vc: decode_attention(q, kc, vc, C - 1))
+    us = _time(fn, qd, kc, vc)
+    cache_bytes = 2 * 4 * C * Hkv * D * 2
+    csv.append(f"kernels/decode_attn_32k,{us:.1f},"
+               f"cache_bytes={cache_bytes};"
+               f"v5e_floor_us={cache_bytes/819e9*1e6:.1f}")
+    for row in csv[-3:]:
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    run(rows)

@@ -1,0 +1,40 @@
+"""Roofline table bench: renders the per-(arch x shape) three-term roofline
+from the dry-run records (results/dryrun_single_pod.jsonl).  Compilation
+happens in launch/dryrun.py (512 placeholder devices, its own process);
+this bench only derives and prints.  Skips gracefully if no records exist.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_single_pod.jsonl")
+
+
+def run(csv: List[str]) -> None:
+    if not os.path.exists(RESULTS):
+        csv.append("roofline/missing,0.0,run=python -m repro.launch.dryrun")
+        print(csv[-1])
+        return
+    with open(RESULTS) as fh:
+        recs = [json.loads(l) for l in fh if l.strip()]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        dom = r["bottleneck"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        csv.append(
+            f"roofline/{r['arch']}/{r['shape']},{step_s*1e6:.0f},"
+            f"bottleneck={dom};compute_ms={r['compute_s']*1e3:.1f};"
+            f"memory_ms={r['memory_s']*1e3:.1f};"
+            f"collective_ms={r['collective_s']*1e3:.1f};"
+            f"useful={r['useful_flops_ratio']*100:.1f}%")
+        print(csv[-1], flush=True)
+    csv.append(f"roofline/summary,0.0,pairs_ok={len(ok)};pairs_total={len(recs)}")
+    print(csv[-1])
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    run(rows)

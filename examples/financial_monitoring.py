@@ -1,0 +1,55 @@
+"""Paper §4.2: financial monitoring with an edge/server split.
+
+Trains V = FC(29,64,128,256,1) on the 30-ticker panel, truncates the
+penultimate layer to 16 units for the on-device monitor, and serves the
+stream with threshold triggering — reporting the paper's headline numbers:
+FN = 0, ~6x on-device compression, ~10x communication reduction.
+
+Run:  PYTHONPATH=src python examples/financial_monitoring.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_financial import FULL as FIN
+from repro.core import safety
+from repro.core.gating import CommsMeter, trigger_mask
+from repro.data.synthetic import financial_series, financial_xy
+from repro.nn.module import param_count
+from repro.training.loop import train_paper
+
+
+def main() -> None:
+    panel = financial_series(0)
+    x, f = financial_xy(panel)
+    print(f"panel: {panel.shape[0]} days x {panel.shape[1]} tickers, "
+          f"warning threshold gamma={FIN.threshold}")
+
+    params, res = train_paper(jax.random.PRNGKey(0), FIN, x, f,
+                              u_mode="truncated", steps=2500, lr=2e-3,
+                              safety_weight=20.0, log_fn=print)
+    out = res["out"]
+    rep = safety.metrics_report(jnp.asarray(f), out["u"], out["fhat"],
+                                eps=0.01, threshold=FIN.threshold)
+    print("\n=== monitoring metrics (threshold 0.8) ===")
+    for k in ("l2", "fn", "fp", "corrected_fp", "safety_violation_rate"):
+        print(f"  {k:24s} {float(rep[k]):.5f}")
+
+    mask = np.asarray(trigger_mask(out["u"], FIN.threshold, 0.05))
+    meter = CommsMeter(bytes_per_request=29 * 4)
+    meter.update(int(mask.sum()), mask.size)
+    v_size = param_count(params["v"])
+    u_size = FIN.monitor_n + 1 + sum(
+        d1 * d2 + d2 for d1, d2 in
+        zip((FIN.in_dim,) + FIN.hidden[:-1], FIN.hidden[:-1] + (FIN.monitor_n,)))
+    print(f"\non-device size: {u_size:,} params vs server {v_size:,} "
+          f"({v_size/u_size:.1f}x compression)")
+    print(f"communication: trigger rate {meter.trigger_rate:.3f} -> "
+          f"{meter.reduction:.1f}x reduction vs ship-everything")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Collaborative serving demo: batched token streams monitored on the edge
+tower; the server backbone is consulted ONLY when the monitor trips the
+warning threshold (paper Fig 1 protocol, LM scale).
+
+Trains briefly first so the monitor is meaningful, then serves and prints
+the per-stream alarm trace + communication report.
+
+Run:  PYTHONPATH=src python examples/serve_collaborative.py --arch granite-8b
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import tokens as tok
+from repro.serving.collaborative import CollaborativeEngine
+from repro.training.loop import train_collab_lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=registry.names())
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--length", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch)
+    print(f"training monitor briefly ({args.train_steps} steps)...")
+    batches = tok.lm_batches(0, cfg, args.streams, 64)
+    params, _ = train_collab_lm(jax.random.PRNGKey(0), cfg, batches,
+                                steps=args.train_steps, lr=1e-3, log_every=20)
+
+    print(f"\nserving {args.streams} streams x {args.length} tokens "
+          f"(threshold={cfg.monitor.threshold}, "
+          f"margin={cfg.monitor.trigger_margin})")
+    stream = next(tok.lm_batches(9, cfg, args.streams, args.length))["tokens"]
+    eng = CollaborativeEngine(params, cfg, batch=args.streams,
+                              max_len=args.length + 8)
+    res = eng.run(stream)
+
+    for b in range(args.streams):
+        trace = "".join("!" if t else "." for t in res["triggered"][b])
+        print(f"  stream {b}: {trace}")
+    rep = res["comms"]
+    print(f"\ntrigger rate {rep['trigger_rate']:.3f}  |  "
+          f"bytes {rep['bytes_sent']:,} vs baseline {rep['bytes_baseline']:,} "
+          f"->  {rep['reduction_x']:.1f}x communication reduction")
+    print("fhat <= u everywhere:",
+          bool(np.all(res["fhat"] <= res["u"] + 1e-6)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import (INPUT_SHAPES, SHAPES_BY_NAME, ArchConfig,
+                                MonitorConfig, ShapeConfig)  # noqa: F401
+from repro.configs import registry  # noqa: F401

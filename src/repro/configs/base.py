@@ -1,0 +1,242 @@
+"""Configuration dataclasses for the repro framework.
+
+``ArchConfig`` describes one backbone (the server-side class ``V`` of the
+paper); ``MonitorConfig`` describes the small on-device tower (class ``U``)
+plus the decomposition hyper-parameters (s, t, n, sigma, threshold) of
+  f_hat = u - s * sigma(v)        (paper Eq. 1).
+
+Every assigned architecture gets a module in this package exporting
+``FULL`` (the exact assigned config) and ``SMOKE`` (a reduced variant of the
+same family: <=2 layers, d_model<=512, <=4 experts) plus ``input_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper (public pool).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Monitor / decomposition config (the paper's contribution).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MonitorConfig:
+    """Edge tower ``u`` and decomposition hyper-parameters.
+
+    The edge tower is a reduced same-family model whose penultimate features
+    feed the paper's truncated-basis head ``u_{n,t} = sum_{i<=n} a_i phi_i + t``
+    (Eq. 8).  ``s`` scales the server-side negative corrector ``-s*sigma(v)``.
+    """
+
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    d_ff: int = 1024
+    # Truncated feature basis size (paper's ``n``); <= d_model.
+    n_features: int = 64
+    # Safety offset t (paper's ``t``); trainable initialisation value.
+    t_init: float = 0.1
+    # Corrector scale s (paper's ``s``).  s = 2*t is the Prop-2/3 optimum.
+    s: float = 0.2
+    # Warning threshold gamma and trigger margin for gated correction.
+    threshold: float = 0.0
+    trigger_margin: float = 0.25
+    # Fraction of the batch the serving compactor reserves for correction.
+    correction_capacity: float = 0.25
+    sigma: str = "sigmoid"  # sigmoid | tanh01
+
+
+# ---------------------------------------------------------------------------
+# Backbone config.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    citation: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # Attention variants -----------------------------------------------------
+    sliding_window: int = 0          # 0 => full attention during prefill
+    long_context_window: int = 0     # window used for the long_500k decode
+                                     # swa-variant (0 => native cache layout)
+
+    # MoE ---------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+
+    # MLA (DeepSeek-V3) -------------------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0               # multi-token-prediction extra heads
+
+    # SSM (Mamba2 / xLSTM) ----------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+
+    # hybrid (zamba2): one shared attention block applied every k ssm blocks
+    shared_attn_every: int = 0
+
+    # xLSTM: one sLSTM block every k mLSTM blocks (0 => pure mLSTM)
+    slstm_every: int = 0
+
+    # VLM ----------------------------------------------------------------------
+    cross_attn_every: int = 0
+    n_image_tokens: int = 0
+
+    # audio ---------------------------------------------------------------------
+    n_codebooks: int = 0
+
+    # distribution knobs (perf hillclimb levers; see EXPERIMENTS.md §Perf) -----
+    # "time" (default since §Perf B1: flash-decode — shard the cache seq axis
+    # over model; attention is local per time-shard, softmax/output combine
+    # via small cross-shard reductions) | "heads" (the recorded baseline:
+    # trailing kv-heads/head_dim dim over model).
+    decode_cache_shard: str = "time"
+    # MoE dispatch impl: "dense" (jit-SPMD global sort dispatch, recorded
+    # baseline), "ep" (expert-parallel shard_map, §Perf A1), "auto" (ep when
+    # a mesh with model | n_experts is active, else dense).
+    moe_impl: str = "dense"
+    # ZeRO-1: shard Adam moments over the data axes as well (§Perf A3).
+    zero1: bool = False
+    # Sequence parallelism (§Perf C1): constrain the residual stream to
+    # P(batch, 'model', None) in norm/elementwise regions; XLA turns the
+    # megatron all-reduce into reduce-scatter + all-gather at equal volume
+    # while the replicated elementwise/norm traffic divides by the model
+    # axis size (Korthikanti et al., adapted to SPMD constraints).
+    seq_parallel: bool = False
+    # Prefill KV sharding: "none" (default) | "time" (§Perf D1 — fixes the
+    # involuntary-remat pathology when kv_heads % model != 0 AND propagation
+    # mishandles it; arch-dependent, measured per arch before enabling).
+    prefill_kv_shard: str = "none"
+
+    # dtypes / memory -----------------------------------------------------------
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"     # parameter storage dtype
+    remat: bool = True               # activation checkpointing in layer scans
+    # Dry-run accounting mode: XLA's cost_analysis counts a while-loop body
+    # ONCE, so the dry-run unrolls layer/chunk scans to get faithful
+    # FLOP/byte/collective totals (runtime configs keep scans rolled).
+    scan_unroll: bool = False
+
+    # monitoring head taps the mean-pooled (or last-token) hidden state
+    monitor: MonitorConfig = field(default_factory=MonitorConfig)
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count estimate (used for MODEL_FLOPS = 6*N*D roofline term).
+    def param_count(self, active_only: bool = False) -> int:
+        d, h = self.d_model, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            if self.use_mla:
+                attn = (
+                    d * self.q_lora_rank
+                    + self.q_lora_rank * nq * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * nq * (self.qk_nope_dim + self.v_head_dim)
+                    + nq * self.v_head_dim * d
+                )
+            else:
+                attn = d * h * (nq + 2 * nkv) + nq * h * d
+        else:
+            attn = 0
+        if self.family == "ssm" or self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            ssm = d * 2 * d_in + d_in * d + d_in * (2 * self.ssm_state + 2)
+        else:
+            ssm = 0
+        mlp_dense = 3 * d * self.d_ff if self.d_ff else 0
+        if self.is_moe:
+            per_expert = 3 * d * self.moe_d_ff
+            moe_total = per_expert * (self.n_experts + self.n_shared_experts)
+            moe_active = per_expert * (self.top_k + self.n_shared_experts)
+            router = d * self.n_experts
+        else:
+            moe_total = moe_active = router = 0
+
+        total = 0
+        active = 0
+        for li in range(self.n_layers):
+            if self.family == "ssm":
+                total += ssm
+                active += ssm
+                continue
+            if self.family == "hybrid":
+                total += ssm + mlp_dense  # mamba block + its mlp? zamba2 blocks are mamba-only
+                active += ssm + mlp_dense
+                continue
+            if self.is_moe and li >= self.first_dense_layers:
+                total += attn + moe_total + router
+                active += attn + moe_active + router
+            else:
+                total += attn + mlp_dense
+                active += attn + mlp_dense
+        if self.family == "hybrid" and self.shared_attn_every:
+            shared = attn + 3 * d * self.d_ff
+            total += shared
+            active += shared * (self.n_layers // self.shared_attn_every)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "audio" and self.n_codebooks:
+            emb = self.n_codebooks * self.vocab_size * d * 2
+        total += emb
+        active += emb
+        return active if active_only else total

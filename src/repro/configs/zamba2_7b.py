@@ -1,0 +1,28 @@
+"""Zamba2-7B [arXiv:2411.15242] — Mamba2 backbone + shared attention block.
+
+81 layers, d_model=3584, 32 heads (GQA kv=32), d_ff=14336, vocab=32000,
+ssm_state=64.  The shared transformer block is applied every 6 Mamba2 blocks
+(param-shared across invocations; per-invocation LoRA deltas omitted, see
+DESIGN.md §5).  long_500k runs natively on the SSM state; the shared
+attention block uses an 8k ring cache at long context.
+"""
+from repro.configs.base import ArchConfig, MonitorConfig
+
+FULL = ArchConfig(
+    name="zamba2-7b", family="hybrid", citation="arXiv:2411.15242",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336,
+    vocab_size=32000, ssm_state=64, ssm_expand=2, ssm_conv=4,
+    shared_attn_every=6, tie_embeddings=True,
+    long_context_window=8192,
+    monitor=MonitorConfig(n_layers=2, d_model=256, n_heads=4, d_ff=1024,
+                          n_features=64),
+)
+
+SMOKE = FULL.replace(
+    # 5 layers / period 2 exercises both the super-block scan AND the tail
+    n_layers=5, d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+    vocab_size=512, ssm_state=16, shared_attn_every=2, remat=False,
+    dtype="float32",
+    monitor=MonitorConfig(n_layers=1, d_model=64, n_heads=2, d_ff=128,
+                          n_features=16),
+)

@@ -1,0 +1,1 @@
+from repro.core import decomposition, gating, losses, safety, theory  # noqa: F401

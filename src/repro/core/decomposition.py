@@ -1,0 +1,204 @@
+"""The paper's contribution: model decomposition  f_hat = u - s*sigma(v).
+
+Two instantiations:
+
+1. ``PaperDecomposition`` — the faithful paper-scale form.  V is an FC net;
+   the monitor u is either
+     * ``truncated``  : u = sum_{i<=n} a_i phi_i + t over V's penultimate
+                        features (paper §4.2, Eq. 8),
+     * ``cosine``     : u over the explicit cosine basis (paper §4.1, where
+                        the ground-truth expansion is known), or
+     * ``independent``: a separate small FC net (paper appendix, Fig 5).
+   Safety is structural: the corrector -s*sigma(v) is strictly negative, so
+   u >= f_hat always; u >= f holds when t is sized per Prop 2.
+
+2. ``init_collab_lm`` / ``collab_*`` — the scaled form used with the 10
+   assigned backbones: v = full backbone + scalar corrector head (server),
+   u = small edge tower + truncated-basis head (device).  This is the
+   Prop-1 regime (arbitrary U); the edge tower never shares weights or
+   activations with the server tower, so the device can run standalone.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MonitorConfig
+from repro.models import api as model_api
+from repro.models.base import cdt
+from repro.nn.module import Params, init_linear, linear
+
+# ---------------------------------------------------------------------------
+# sigma: fixed continuous invertible map into (0,1)
+# ---------------------------------------------------------------------------
+
+
+def sigma(x: jnp.ndarray, kind: str = "sigmoid") -> jnp.ndarray:
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if kind == "tanh01":
+        return 0.5 * (jnp.tanh(x) + 1.0)
+    raise ValueError(kind)
+
+
+def sigma_inv(y: jnp.ndarray, kind: str = "sigmoid") -> jnp.ndarray:
+    y = jnp.clip(y, 1e-7, 1 - 1e-7)
+    if kind == "sigmoid":
+        return jnp.log(y) - jnp.log1p(-y)
+    if kind == "tanh01":
+        return jnp.arctanh(2.0 * y - 1.0)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, dims) -> Params:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": init_linear(ks[i], dims[i], dims[i + 1], bias=True,
+                                 stddev=1.0 / math.sqrt(dims[i]))
+            for i in range(len(dims) - 1)}
+
+
+def mlp_forward(p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (scalar_out (B,), penultimate features (B, n_basis))."""
+    n = len(p)
+    h = x
+    for i in range(n - 1):
+        h = jnp.tanh(linear(p[f"l{i}"], h))
+    out = linear(p[f"l{n-1}"], h)
+    return out[..., 0], h
+
+
+def cosine_basis(x: jnp.ndarray, n_modes: int) -> jnp.ndarray:
+    """phi_i(x) = cos(i x), i = 1..n_modes; x: (B,) or (B,1) -> (B, n_modes)."""
+    xs = x if x.ndim == 1 else x[..., 0]
+    i = jnp.arange(1, n_modes + 1, dtype=jnp.float32)
+    return jnp.cos(xs[:, None] * i[None, :])
+
+
+def init_paper_decomposition(key, cfg, *, u_mode: str = "truncated",
+                             u_dims=None, n_modes: int = 0) -> Params:
+    """cfg: PaperMLPConfig.  Builds {v, (a, raw_t) | u_net} params."""
+    kv, ku, ka = jax.random.split(key, 3)
+    dims = (cfg.in_dim,) + tuple(cfg.hidden) + (1,)
+    p: Params = {"v": init_mlp(kv, dims)}
+    if u_mode == "independent":
+        p["u_net"] = init_mlp(ku, tuple(u_dims or (cfg.in_dim, 10, 1)))
+        p["raw_t"] = jnp.asarray(_inv_softplus(cfg.t_init), jnp.float32)
+    else:
+        n_basis = n_modes if u_mode == "cosine" else cfg.n_basis
+        p["a"] = 0.1 * jax.random.normal(ka, (n_basis,), jnp.float32)
+        p["raw_t"] = jnp.asarray(_inv_softplus(cfg.t_init), jnp.float32)
+    return p
+
+
+def _inv_softplus(y: float) -> float:
+    import numpy as np
+    return float(np.log(np.expm1(y))) if y < 20 else float(y)
+
+
+def paper_forward(p: Params, x: jnp.ndarray, cfg, *, u_mode: str = "truncated",
+                  s: Optional[float] = None, monitor_n: Optional[int] = None,
+                  sigma_kind: str = "sigmoid") -> Dict[str, jnp.ndarray]:
+    """Full collaborative forward.  Returns u, v, fhat, t."""
+    s = cfg.s if s is None else s
+    n = cfg.monitor_n if monitor_n is None else monitor_n
+    v_out, phi = mlp_forward(p["v"], x)
+    t = jax.nn.softplus(p["raw_t"])
+    if u_mode == "independent":
+        u, _ = mlp_forward(p["u_net"], x)
+        u = u + t
+    else:
+        basis = cosine_basis(x, p["a"].shape[0]) if u_mode == "cosine" else phi
+        # truncation: only the first n basis functions reach the device
+        mask = (jnp.arange(p["a"].shape[0]) < n).astype(jnp.float32)
+        u = basis @ (p["a"] * mask) + t
+    corr = s * sigma(v_out, sigma_kind)
+    return {"u": u, "v": v_out, "corr": corr, "fhat": u - corr, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Scaled form: edge tower + server backbone (the 10 assigned archs)
+# ---------------------------------------------------------------------------
+
+
+def edge_arch(cfg: ArchConfig) -> ArchConfig:
+    """Derive the edge tower's ArchConfig from MonitorConfig.
+
+    The edge model is a small dense decoder (audio family keeps codebook
+    embeddings so it can read the same token stream).  It is replicated on
+    the device mesh axis — never sharded — mirroring 'all of u fits on the
+    edge device'.
+    """
+    m = cfg.monitor
+    fam = "audio" if cfg.family == "audio" else "dense"
+    return ArchConfig(
+        name=f"{cfg.name}-edge", family=fam, citation="edge tower (paper U)",
+        n_layers=m.n_layers, d_model=m.d_model, n_heads=m.n_heads,
+        n_kv_heads=m.n_heads, d_ff=m.d_ff, vocab_size=cfg.vocab_size,
+        n_codebooks=cfg.n_codebooks, tie_embeddings=True,
+        sliding_window=1024,  # edge memory budget: 1k-token ring cache
+        dtype=cfg.dtype, param_dtype=cfg.param_dtype, remat=False,
+        scan_unroll=cfg.scan_unroll, monitor=m,
+    )
+
+
+def init_collab_lm(key, cfg: ArchConfig) -> Params:
+    """{server, v_head, edge, u_head(a, raw_t)} — the deployed system."""
+    ks = jax.random.split(key, 4)
+    m = cfg.monitor
+    ecfg = edge_arch(cfg)
+    return {
+        "server": model_api.init_model(ks[0], cfg),
+        "v_head": init_linear(ks[1], cfg.d_model, 1, bias=True),
+        "edge": model_api.init_model(ks[2], ecfg),
+        "u_head": {
+            "w_feat": init_linear(ks[3], m.d_model, m.n_features),
+            "a": 0.1 * jax.random.normal(jax.random.fold_in(ks[3], 1),
+                                         (m.n_features,), jnp.float32),
+            "raw_t": jnp.asarray(_inv_softplus(m.t_init), jnp.float32),
+        },
+    }
+
+
+def monitor_score(params: Params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
+    """Edge-only path: u(x) per position.  MUST lower with no model-axis
+    collectives (asserted in tests) — this is the paper's 'local' guarantee."""
+    m = cfg.monitor
+    from repro.nn.attention import kv_shard_optout
+    with kv_shard_optout():  # edge tower stays device-local (paper req.)
+        eout = model_api.forward(params["edge"], edge_arch(cfg), batch)
+    feats = jnp.tanh(linear(params["u_head"]["w_feat"],
+                            eout["hidden"].astype(jnp.float32)))
+    n = m.n_features  # full n by default; truncation swept in benchmarks
+    mask = (jnp.arange(feats.shape[-1]) < n).astype(jnp.float32)
+    t = jax.nn.softplus(params["u_head"]["raw_t"])
+    return feats @ (params["u_head"]["a"] * mask) + t
+
+
+def corrector_score(params: Params, cfg: ArchConfig,
+                    server_out: Dict) -> jnp.ndarray:
+    """v(x) per position from the server backbone's hidden states."""
+    return linear(params["v_head"],
+                  server_out["hidden"].astype(jnp.float32))[..., 0]
+
+
+def collab_forward(params: Params, cfg: ArchConfig, batch: Dict,
+                   *, s: Optional[float] = None) -> Dict[str, jnp.ndarray]:
+    """Training-time forward of the full collaborative system."""
+    m = cfg.monitor
+    s = m.s if s is None else s
+    server_out = model_api.forward(params["server"], cfg, batch)
+    u = monitor_score(params, cfg, batch)
+    v = corrector_score(params, cfg, server_out)
+    corr = s * sigma(v, m.sigma)
+    return {"u": u, "v": v, "fhat": u - corr, "corr": corr,
+            "logits": server_out["logits"], "aux_loss": server_out["aux_loss"],
+            "mtp_logits": server_out.get("mtp_logits"),
+            "t": jax.nn.softplus(params["u_head"]["raw_t"])}

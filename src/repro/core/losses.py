@@ -1,0 +1,63 @@
+"""Training objectives.
+
+Paper scale: pure end-to-end MSE on f_hat (the paper's §4 training), with an
+optional safety hinge on (f - u) for the 'independent U' regime where t is
+learned rather than sized by Prop 2.
+
+LLM scale: the server tower trains as a language model (CE) while the
+decomposition trains on the monitoring target; MoE load-balance aux and the
+DeepSeek MTP loss fold in.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def paper_loss(out: Dict[str, jnp.ndarray], f: jnp.ndarray, *,
+               safety_weight: float = 0.0, margin: float = 0.0) -> jnp.ndarray:
+    """MSE(f_hat, f) + lambda * E[relu(f - u + margin)^2]."""
+    loss = jnp.mean((out["fhat"] - f) ** 2)
+    if safety_weight:
+        viol = jax.nn.relu(f - out["u"] + margin)
+        loss = loss + safety_weight * jnp.mean(viol ** 2)
+    return loss
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over all positions; supports (B,S,V) and audio (B,S,K,V)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def collab_lm_loss(out: Dict[str, jnp.ndarray], batch: Dict[str, jnp.ndarray], *,
+                   monitor_weight: float = 1.0, safety_weight: float = 10.0,
+                   aux_weight: float = 0.01, mtp_weight: float = 0.3,
+                   margin: float = 0.0) -> Dict[str, jnp.ndarray]:
+    """Joint objective for the collaborative LM system.
+
+    lm       : next-token CE of the server tower
+    monitor  : MSE(f_hat, monitor_target) — the paper's approximation term
+    safety   : hinge on u < f (paper's safety requirement, learned form)
+    aux      : MoE load-balance (+ MTP CE if the arch has an MTP head)
+    """
+    labels = batch["labels"]
+    lm = cross_entropy(out["logits"], labels)
+    f = batch["monitor_target"].astype(jnp.float32)
+    monitor = jnp.mean((out["fhat"] - f) ** 2)
+    safety = jnp.mean(jax.nn.relu(f - out["u"] + margin) ** 2)
+    total = (lm + monitor_weight * monitor + safety_weight * safety
+             + aux_weight * out["aux_loss"])
+    parts = {"lm": lm, "monitor": monitor, "safety": safety,
+             "aux": out["aux_loss"]}
+    if out.get("mtp_logits") is not None:
+        # depth-1 MTP: predict labels shifted one more step
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mtp = cross_entropy(out["mtp_logits"][:, :-2], mtp_labels[:, :-2])
+        total = total + mtp_weight * mtp
+        parts["mtp"] = mtp
+    parts["total"] = total
+    return parts

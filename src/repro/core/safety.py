@@ -1,0 +1,55 @@
+"""Performance metrics of paper §2.3: approximation error (Eq. 2), false
+positive rate (Eq. 3), false negative rate (Eq. 4) — plus the corrected
+(post-server) variants reported in Fig 2(d).
+
+All metrics take the ground truth f, the on-device monitor u, and optionally
+the combined prediction f_hat = u - s*sigma(v), as same-shaped arrays; the
+threshold gamma defaults to 0 as in the paper ("for simplicity of
+presentation we can set gamma to 0"), overridable for e.g. the financial
+experiment's 0.8.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def approx_error(f: jnp.ndarray, fhat: jnp.ndarray, p: float = 2.0) -> jnp.ndarray:
+    """||f - fhat||_p, Monte-Carlo normalised (vol(Omega)=1 convention)."""
+    d = jnp.abs(f.astype(jnp.float32) - fhat.astype(jnp.float32))
+    if p == jnp.inf or p == float("inf"):
+        return jnp.max(d)
+    return jnp.mean(d ** p) ** (1.0 / p)
+
+
+def fp_rate(f: jnp.ndarray, u: jnp.ndarray, eps: float = 0.0,
+            threshold: float = 0.0) -> jnp.ndarray:
+    """mu_FP,eps (Eq. 3): u raises the alarm while f is safely below."""
+    return jnp.mean((f < threshold - eps) & (u > threshold + eps))
+
+
+def fn_rate(f: jnp.ndarray, u: jnp.ndarray, eps: float = 0.0,
+            threshold: float = 0.0) -> jnp.ndarray:
+    """mu_FN,eps (Eq. 4): the safety-critical miss — f is adverse, u silent."""
+    return jnp.mean((f > threshold + eps) & (u < threshold - eps))
+
+
+def safety_violation(f: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Mass and magnitude of u < f violations (u must upper-bound f)."""
+    gap = f.astype(jnp.float32) - u.astype(jnp.float32)
+    return jnp.mean(gap > 0), jnp.max(jnp.maximum(gap, 0.0))
+
+
+def metrics_report(f, u, fhat, *, eps: float = 0.05, threshold: float = 0.0):
+    """Full §2.3 metric set; 'corrected_*' replicate Fig 2(d) (server view)."""
+    viol_rate, viol_max = safety_violation(f, u)
+    return {
+        "l1": approx_error(f, fhat, 1.0),
+        "l2": approx_error(f, fhat, 2.0),
+        "linf": approx_error(f, fhat, jnp.inf),
+        "fp": fp_rate(f, u, eps, threshold),
+        "fn": fn_rate(f, u, eps, threshold),
+        "corrected_fp": fp_rate(f, fhat, eps, threshold),
+        "corrected_fn": fn_rate(f, fhat, eps, threshold),
+        "safety_violation_rate": viol_rate,
+        "safety_violation_max": viol_max,
+    }

@@ -1,0 +1,1 @@
+from repro.data import synthetic, tokens  # noqa: F401

@@ -1,0 +1,73 @@
+"""jit'd dispatch wrappers: one call site per kernel, selecting between the
+Pallas TPU kernel (compiled on TPU, interpret=True on CPU tests) and the
+production XLA fallback.  The model code takes these as its ``attn_fn`` /
+``scan_fn`` injection points.
+
+Global policy: ``set_impl("xla" | "pallas" | "pallas_interpret")``.  The
+dry-run keeps "xla" (Pallas→HLO interpret lowering would pollute the
+roofline); kernel tests force "pallas_interpret".
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dk
+from repro.kernels import flash_attention as _fk
+from repro.kernels import monitor_combine as _mk
+from repro.kernels import ssm_scan as _sk
+from repro.nn.attention import chunked_attention as _xla_attention
+from repro.nn.attention import decode_attention as _xla_decode
+
+_IMPL: str = "xla"
+
+
+def set_impl(impl: Literal["xla", "pallas", "pallas_interpret"]) -> None:
+    global _IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _IMPL = impl
+
+
+def get_impl() -> str:
+    return _IMPL
+
+
+def _interp() -> bool:
+    return _IMPL == "pallas_interpret" or jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, **kw):
+    if _IMPL == "xla":
+        return _xla_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    return _fk.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interp(), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, **kw):
+    if _IMPL == "xla":
+        return _xla_decode(q, k_cache, v_cache, pos, window=window)
+    return _dk.decode_attention(q, k_cache, v_cache, pos, window=window,
+                                interpret=_interp(), **kw)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, h0=None):
+    """Signature-compatible with nn.ssm.ssd_chunked (the XLA path)."""
+    from repro.nn.ssm import ssd_chunked
+    if _IMPL == "xla":
+        return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    la = dt.astype(jnp.float32) * A[None, None, :]
+    y = _sk.ssd_scan(xdt, la, Bm, Cm, chunk=chunk, interpret=_interp())
+    return y, None  # kernel path does not export the final state
+
+
+def monitor_combine(u, v, f, *, s, threshold=0.0, margin=0.25):
+    if _IMPL == "xla":
+        from repro.kernels.ref import monitor_combine_ref
+        return monitor_combine_ref(u, v, f, s=s, threshold=threshold,
+                                   margin=margin)
+    return _mk.monitor_combine(u, v, f, s=s, threshold=threshold,
+                               margin=margin, interpret=_interp())

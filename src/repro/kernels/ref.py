@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every kernel (naive, O(S^2)/sequential forms —
+independent of both the Pallas kernels AND the production chunked/blocked
+implementations, so each is checked against ground truth, not itself).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Naive full-matrix attention. q:(B,S,Hq,D) k,v:(B,T,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bskgd,btkd->bskgt", qf, k.astype(jnp.float32)) / math.sqrt(D)
+    row = jnp.arange(S)[:, None]
+    col = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= col <= row
+    if window:
+        mask &= col > row - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
+    """Naive single-query attention. q:(B,Hq,D), caches:(B,C,Hkv,D)."""
+    B, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32)) / math.sqrt(D)
+    idx = jnp.arange(C)
+    valid = (idx < jnp.minimum(pos + 1, C)) if window else (idx <= pos)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def ssd_ref(xdt, la, Bm, Cm):
+    """Fully sequential SSD recurrence (the mathematical definition):
+        h_t = exp(la_t) h_{t-1} + xdt_t B_t^T ;  y_t = C_t h_t^T
+    xdt:(B,S,H,P) la:(B,S,H) Bm,Cm:(B,S,N) -> y:(B,S,H,P) f32."""
+    B, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, la_t, b_t, c_t = inp  # (B,H,P),(B,H),(B,N),(B,N)
+        h = (h * jnp.exp(la_t)[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", x_t, b_t))
+        y = jnp.einsum("bn,bhpn->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (xdt.astype(jnp.float32).transpose(1, 0, 2, 3),
+          la.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def monitor_combine_ref(u, v, f, *, s, threshold=0.0, margin=0.25):
+    uf = u.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    fhat = uf - s * jax.nn.sigmoid(vf)
+    mask = (uf > threshold - margin).astype(jnp.float32)
+    counts = jnp.stack([jnp.sum(mask),
+                        jnp.sum((f.astype(jnp.float32) > uf).astype(jnp.float32))])
+    return fhat, mask, counts

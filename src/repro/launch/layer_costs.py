@@ -1,0 +1,102 @@
+"""Linear layer-cost extrapolation for the dry-run roofline.
+
+XLA's cost_analysis counts a while-loop body once, and fully unrolling an
+81-layer model makes SPMD compilation take tens of minutes.  Layers inside
+one scan group are IDENTICAL, so per-step cost is exactly linear in the
+group's layer count:
+
+    cost(counts) = glue + sum_g counts[g] * c_g
+
+We compile small UNROLLED probes — the base (all groups = 1) plus one probe
+per group (that group = 2) — solve for {glue, c_g}, and extrapolate to the
+full counts.  tests/test_dryrun_subprocess.py + EXPERIMENTS.md §Methodology
+validate the extrapolation against a directly-unrolled compile (<0.1%% off).
+
+The full production (rolled) program is still compiled separately — THAT
+compile proves the sharding is coherent at full depth and provides
+memory_analysis; this module only reconstructs faithful cost totals.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+def count_knobs(cfg: ArchConfig) -> Dict[str, int]:
+    """Full per-group layer counts for each scan group of the architecture."""
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n_super = cfg.n_layers // cfg.cross_attn_every
+        tail = cfg.n_layers - n_super * cfg.cross_attn_every
+        k = {"super": n_super}
+        if tail:
+            k["tail"] = tail
+        return k
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        tail = cfg.n_layers - n_super * cfg.shared_attn_every
+        k = {"super": n_super}
+        if tail:
+            k["tail"] = tail
+        return k
+    if cfg.family == "ssm" and cfg.slstm_every:
+        n_super = cfg.n_layers // cfg.slstm_every
+        tail = cfg.n_layers - n_super * cfg.slstm_every
+        k = {"super": n_super}
+        if tail:
+            k["tail"] = tail
+        return k
+    if cfg.is_moe:
+        k = {}
+        if cfg.first_dense_layers:
+            k["dense"] = cfg.first_dense_layers
+        k["moe"] = cfg.n_layers - cfg.first_dense_layers
+        return k
+    return {"blocks": cfg.n_layers}
+
+
+def with_counts(cfg: ArchConfig, counts: Dict[str, int]) -> ArchConfig:
+    """Rebuild the config with reduced per-group counts (same layer shapes)."""
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n = cfg.cross_attn_every * counts["super"] + counts.get("tail", 0)
+        return cfg.replace(n_layers=n)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        n = cfg.shared_attn_every * counts["super"] + counts.get("tail", 0)
+        return cfg.replace(n_layers=n)
+    if cfg.family == "ssm" and cfg.slstm_every:
+        n = cfg.slstm_every * counts["super"] + counts.get("tail", 0)
+        return cfg.replace(n_layers=n)
+    if cfg.is_moe:
+        fd = counts.get("dense", 0)
+        return cfg.replace(first_dense_layers=fd, n_layers=fd + counts["moe"])
+    return cfg.replace(n_layers=counts["blocks"])
+
+
+def probe_plan(cfg: ArchConfig):
+    """Returns (full_counts, [(name, counts) probe configs]).
+
+    Probes: base = all groups 1; then one probe per group with that group=2.
+    """
+    full = count_knobs(cfg)
+    base = {g: 1 for g in full}
+    probes = [("base", dict(base))]
+    for g in full:
+        c = dict(base)
+        c[g] = 2
+        probes.append((g, c))
+    return full, probes
+
+
+def extrapolate(full: Dict[str, int], probe_costs: Dict[str, Dict[str, float]]
+                ) -> Dict[str, float]:
+    """probe_costs: {'base': {...}, '<group>': {...}} of cost dicts -> full
+    cost dict.  cost(base)=glue+sum c_g; cost(g)=base+c_g."""
+    base = probe_costs["base"]
+    out = {}
+    for key in base:
+        c_g = {g: probe_costs[g][key] - base[key] for g in full}
+        glue = base[key] - sum(c_g.values())
+        out[key] = glue + sum(c_g[g] * full[g] for g in full)
+        # numerical floor: costs cannot be negative
+        out[key] = max(out[key], 0.0)
+    return out

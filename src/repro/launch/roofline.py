@@ -1,0 +1,135 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` (post-SPMD, per-device) supplies FLOPs/bytes; collective
+bytes are parsed from the partitioned HLO text (result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+HLO shapes in the partitioned module are per-device, so all three terms are
+per-chip quantities; the brief's global formulation (X / (chips * BW))
+is identical.  Target: TPU v5e.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (brief-specified)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device result bytes of every collective op, by op kind.
+
+    Matches both sync (``all-reduce(``) and async-start forms; ``-done`` ops
+    are skipped (their bytes were counted at ``-start``).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        _, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            idx = rhs.find(kind + "(")
+            if idx < 0:
+                idx = rhs.find(kind + "-start(")
+            if idx <= 0:  # idx==0 would mean no result type: not an op line
+                continue
+            for dt, dims in _SHAPE_RE.findall(rhs[:idx]):
+                out[kind] += _shape_bytes(dt, dims)
+            break
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6*N*D (or 2*N*D fwd-only), ACTIVE params
+    useful_flops_ratio: float     # model_flops / (chips * flops_per_device)
+    bytes_per_device_peak: Optional[float] = None  # memory_analysis if available
+
+    def as_dict(self) -> Dict:
+        return asdict(self)
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Flat cost record of one compiled artifact (per-device)."""
+    ca = compiled.cost_analysis() or {}
+    cb = collective_bytes(compiled.as_text())
+    d = {"flops": float(ca.get("flops", 0.0)),
+         "bytes": float(ca.get("bytes accessed", 0.0))}
+    for k, v in cb.items():
+        d["coll_" + k] = float(v)
+    return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
+            model_flops: float) -> Roofline:
+    return analyze_costs(cost_dict(compiled), arch=arch, shape=shape,
+                         mesh_desc=mesh_desc, chips=chips,
+                         model_flops=model_flops)
+
+
+def analyze_costs(costs: Dict[str, float], *, arch: str, shape: str,
+                  mesh_desc: str, chips: int, model_flops: float) -> Roofline:
+    flops = costs["flops"]
+    byts = costs["bytes"]
+    cb = {k[len("coll_"):]: v for k, v in costs.items()
+          if k.startswith("coll_")}
+    ctotal = float(sum(cb.values()))
+    terms = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW,
+             "collective": ctotal / ICI_BW}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=ctotal, collective_breakdown=cb,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / (chips * flops)) if flops else 0.0,
+    )
+
+
+def fmt_row(r: Roofline) -> str:
+    return (f"{r.arch:22s} {r.shape:12s} {r.mesh:10s} "
+            f"compute {r.compute_s*1e3:9.3f}ms  memory {r.memory_s*1e3:9.3f}ms  "
+            f"collective {r.collective_s*1e3:9.3f}ms  -> {r.bottleneck:10s} "
+            f"useful {100*r.useful_flops_ratio:5.1f}%")

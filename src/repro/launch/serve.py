@@ -1,0 +1,66 @@
+"""Serving launcher: batched collaborative monitoring over token streams.
+
+The jitted serve step (server decode + corrector, edge decode + monitor,
+gated combine) is the same function the dry-run lowers for decode_32k /
+long_500k; here it runs on the host mesh with a reduced config.
+
+Run:  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \
+          --smoke --tokens 64 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import decomposition as deco
+from repro.data import tokens as tok
+from repro.launch.steps import EDGE_CACHE_LEN, make_serve_step
+from repro.models import api as model_api
+from repro.training import checkpoint as ckpt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.names())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_full(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = deco.init_collab_lm(key, cfg)
+    if args.ckpt_dir:
+        _, params, _ = ckpt.load(args.ckpt_dir, params)
+        print(f"restored {args.ckpt_dir}")
+
+    B, cap = args.batch, args.tokens + 8
+    ecfg = deco.edge_arch(cfg)
+    server_cache = model_api.init_cache(cfg, B, cap)
+    edge_cache = model_api.init_cache(ecfg, B, min(cap, EDGE_CACHE_LEN))
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    stream = next(tok.lm_batches(5, cfg, B, args.tokens))["tokens"]
+    trig = np.zeros((B, args.tokens), bool)
+    t0 = time.time()
+    for t in range(args.tokens):
+        out = serve_step(params, server_cache, edge_cache,
+                         jnp.asarray(stream[:, t]), jnp.asarray(t, jnp.int32))
+        server_cache, edge_cache = out["server_cache"], out["edge_cache"]
+        trig[:, t] = np.asarray(out["mask"]) > 0
+    dt = (time.time() - t0) / args.tokens
+    print(f"{args.tokens} steps x batch {B}:  {dt*1e3:.1f} ms/step  "
+          f"({B/dt:.1f} tok/s)")
+    for b in range(B):
+        print(f"  stream {b}: " + "".join("!" if x else "." for x in trig[b]))
+    print(f"trigger rate {trig.mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

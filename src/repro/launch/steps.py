@@ -1,0 +1,130 @@
+"""Shape-complete step functions for the dry-run / launchers.
+
+Three steps per architecture, matching the assigned input-shape kinds:
+
+  train_step    (train_4k)    : collaborative fwd + loss + grads + Adam
+  prefill_step  (prefill_32k) : collaborative fwd (monitor + corrector scores)
+  serve_step    (decode_32k / long_500k): ONE new token against a seq_len
+                KV/SSM cache — server decode + corrector, edge decode +
+                monitor, fused combine, trigger mask.
+
+``monitor_step`` is the edge-only path (no server tower): tests assert its
+lowered HLO contains no model-axis collectives (paper locality requirement).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import decomposition as deco
+from repro.core.gating import masked_correction
+from repro.core.losses import collab_lm_loss
+from repro.models import api as model_api
+from repro.models.base import decode_capacity
+from repro.nn.module import linear
+from repro.training.optimizer import AdamW
+
+EDGE_CACHE_LEN = 1024  # edge ring-buffer budget (device memory constraint)
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            out = deco.collab_forward(p, cfg, batch)
+            return collab_lm_loss(out, batch)["total"]
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt_state2, gnorm = opt.update(grads, opt_state, params)
+        return params2, opt_state2, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        out = deco.collab_forward(params, cfg, batch)
+        m = cfg.monitor
+        fhat, mask = masked_correction(out["u"], out["corr"], m.threshold,
+                                       m.trigger_margin)
+        return {"logits": out["logits"], "u": out["u"], "fhat": fhat,
+                "trigger_rate": jnp.mean(mask)}
+
+    return prefill_step
+
+
+def _edge_u(params, cfg: ArchConfig, hidden_t):
+    hd = params["u_head"]
+    feats = jnp.tanh(linear(hd["w_feat"], hidden_t.astype(jnp.float32)))
+    return feats @ hd["a"] + jax.nn.softplus(hd["raw_t"])
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    ecfg = deco.edge_arch(cfg)
+    m = cfg.monitor
+
+    def serve_step(params, server_cache, edge_cache, tokens, pos):
+        logits, h, new_sc = model_api.decode_step(params["server"], cfg,
+                                                  server_cache, tokens, pos)
+        v = linear(params["v_head"], h.astype(jnp.float32))[..., 0]
+        etok = tokens[..., 0] if cfg.family == "audio" and ecfg.family != "audio" else tokens
+        _, eh, new_ec = model_api.decode_step(params["edge"], ecfg,
+                                              edge_cache, etok, pos)
+        u = _edge_u(params, cfg, eh)
+        corr = m.s * jax.nn.sigmoid(v)
+        fhat, mask = masked_correction(u, corr, m.threshold, m.trigger_margin)
+        return {"logits": logits, "u": u, "fhat": fhat, "mask": mask,
+                "server_cache": new_sc, "edge_cache": new_ec}
+
+    return serve_step
+
+
+def make_monitor_step(cfg: ArchConfig) -> Callable:
+    """Edge-only decode step (the device's always-on path)."""
+    ecfg = deco.edge_arch(cfg)
+
+    def monitor_step(params, edge_cache, tokens, pos):
+        _, eh, new_ec = model_api.decode_step(params["edge"], ecfg,
+                                              edge_cache, tokens, pos)
+        u = _edge_u(params, cfg, eh)
+        return {"u": u, "edge_cache": new_ec}
+
+    return monitor_step
+
+
+# ---------------------------------------------------------------------------
+# Shape-only inputs for each step (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def step_and_specs(cfg: ArchConfig, shape: ShapeConfig, key=None
+                   ) -> Tuple[Callable, Tuple]:
+    """Returns (step_fn, example ShapeDtypeStruct args)."""
+    params = jax.eval_shape(
+        lambda: deco.init_collab_lm(jax.random.PRNGKey(0), cfg))
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4)
+        opt_state = jax.eval_shape(lambda: opt.init(params))
+        batch = model_api.input_specs(cfg, shape)
+        return make_train_step(cfg, opt), (params, opt_state, batch)
+
+    if shape.kind == "prefill":
+        batch = model_api.input_specs(cfg, shape)
+        return make_prefill_step(cfg), (params, batch)
+
+    # decode
+    ecfg = deco.edge_arch(cfg)
+    server_cache = jax.eval_shape(lambda: model_api.init_cache(cfg, B, S))
+    edge_cache = jax.eval_shape(
+        lambda: model_api.init_cache(ecfg, B, min(S, EDGE_CACHE_LEN)))
+    if cfg.family == "audio":
+        tokens = jax.ShapeDtypeStruct((B, cfg.n_codebooks), jnp.int32)
+    else:
+        tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return make_serve_step(cfg), (params, server_cache, edge_cache, tokens, pos)

@@ -1,0 +1,1 @@
+from repro.nn import attention, embedding, mlp, module, moe, norms, rotary, ssm, xlstm  # noqa: F401

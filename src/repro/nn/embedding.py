@@ -1,0 +1,42 @@
+"""Token embeddings and output heads (incl. multi-codebook audio variants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Params, normal_init
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (vocab, d_model), dtype, 0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Logits in f32 (softmax stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      p["table"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def init_codebook_embedding(key, n_codebooks: int, vocab: int, d_model: int,
+                            dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (n_codebooks, vocab, d_model), dtype, 0.02)}
+
+
+def codebook_embed(p: Params, tokens: jnp.ndarray,
+                   compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """tokens: (B, S, K) -> sum over codebooks of per-book embeddings."""
+    K = tokens.shape[-1]
+    tab = p["table"].astype(compute_dtype)  # (K, V, d)
+    outs = [tab[k][tokens[..., k]] for k in range(K)]
+    return sum(outs)
+
+
+def codebook_unembed(p: Params, x: jnp.ndarray,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """-> (B, S, K, V) per-codebook logits."""
+    tab = p["table"].astype(compute_dtype)  # (K, V, d)
+    return jnp.einsum("...d,kvd->...kv", x.astype(compute_dtype), tab).astype(jnp.float32)

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen family default) and GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Params, init_linear, linear
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+        "w_up": init_linear(ks[1], d_model, d_ff, dtype=dtype),
+        "w_down": init_linear(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    g = linear(p["w_gate"], x, compute_dtype=compute_dtype)
+    u = linear(p["w_up"], x, compute_dtype=compute_dtype)
+    return linear(p["w_down"], jax.nn.silu(g) * u, compute_dtype=compute_dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, *, bias: bool = True,
+                  dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": init_linear(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+        "w_out": init_linear(ks[1], d_ff, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return linear(p["w_out"], jax.nn.gelu(linear(p["w_in"], x, compute_dtype=compute_dtype)),
+                  compute_dtype=compute_dtype)

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE), supporting offset positions for decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,), float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """Rotate ``x`` of shape (..., S, H, D) by position-dependent angles.
+
+    ``positions`` has shape broadcastable to (..., S). Uses the interleaved
+    (GPT-NeoX "half-split") convention used by llama/qwen.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)

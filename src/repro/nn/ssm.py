@@ -1,0 +1,205 @@
+"""Mamba2 (SSD) block: chunked-scan prefill/training + recurrent decode.
+
+TPU adaptation (DESIGN.md §3): the GPU reference is a fused CUDA scan; here
+the SSD *matrix form* maps the intra-chunk work onto dense einsums (MXU
+friendly) and carries the inter-chunk state (B, H, P, N) through a
+lax.scan — the Pallas kernel in kernels/ssm_scan.py tiles the same
+computation into VMEM blocks.  All recurrence math is f32.
+
+Projections are kept SEPARATE (w_z / w_x / w_B / w_C / w_dt and per-stream
+convs) rather than one fused in_proj: the fused output dim
+(2*d_in + 2N + H) is not divisible by the model mesh axis, while each
+split stream shards cleanly (d_in and H are multiples of 16 for the
+assigned configs) — tensor-parallel-friendly by construction.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Params, init_linear, linear, normal_init
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N) recurrent state
+    conv_x: jnp.ndarray   # (B, conv_k - 1, d_in) conv tails per stream
+    conv_B: jnp.ndarray   # (B, conv_k - 1, N)
+    conv_C: jnp.ndarray   # (B, conv_k - 1, N)
+
+
+def ssm_dims(d_model: int, expand: int, state: int, head_p: int = 64):
+    d_in = expand * d_model
+    n_heads = d_in // head_p
+    return d_in, n_heads, head_p, state
+
+
+def init_mamba2(key, d_model: int, *, expand: int = 2, state: int = 64,
+                conv_k: int = 4, head_p: int = 64, dtype=jnp.float32) -> Params:
+    d_in, H, P, N = ssm_dims(d_model, expand, state, head_p)
+    ks = jax.random.split(key, 9)
+    conv_sd = 1.0 / math.sqrt(conv_k)
+    return {
+        "w_z": init_linear(ks[0], d_model, d_in, dtype=dtype),
+        "w_x": init_linear(ks[1], d_model, d_in, dtype=dtype),
+        "w_B": init_linear(ks[2], d_model, N, dtype=dtype),
+        "w_C": init_linear(ks[3], d_model, N, dtype=dtype),
+        "w_dt": init_linear(ks[4], d_model, H, dtype=dtype),
+        "conv_x": {"w": normal_init(ks[5], (conv_k, d_in), dtype, conv_sd),
+                   "b": jnp.zeros((d_in,), dtype)},
+        "conv_B": {"w": normal_init(ks[6], (conv_k, N), dtype, conv_sd),
+                   "b": jnp.zeros((N,), dtype)},
+        "conv_C": {"w": normal_init(ks[7], (conv_k, N), dtype, conv_sd),
+                   "b": jnp.zeros((N,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": init_linear(ks[8], d_in, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x:(B,S,C), w:(K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return y + b[None, None, :]
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+                h0: jnp.ndarray | None = None,
+                unroll: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.  x:(B,S,H,P) dt:(B,S,H) A:(H,) Bm,Cm:(B,S,N) -> (y, h_final).
+
+    y_t = C_t^T h_t,   h_t = exp(dt_t A_h) h_{t-1} + dt_t B_t x_t^T
+
+    Canonical Mamba2 chunked form: ALL intra-chunk work (the matmuls) is
+    batched over the chunk axis — MXU-parallel across chunks and counted
+    exactly by cost_analysis — and only the tiny elementwise state
+    combination h_c = decay_c * h_{c-1} + S_c runs in a lax.scan.
+    ``unroll`` only unrolls that cheap state scan (dry-run accounting).
+    """
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = chunk if S % chunk == 0 else S
+    nch = S // L
+    xf = x.astype(jnp.float32)
+    la = (dt.astype(jnp.float32) * A[None, None, :])  # log decay (B,S,H), <= 0
+    xdt = xf * dt.astype(jnp.float32)[..., None]
+
+    xdtc = xdt.reshape(B_, nch, L, H, P)
+    lac = la.reshape(B_, nch, L, H)
+    Bc = Bm.astype(jnp.float32).reshape(B_, nch, L, N)
+    Cc = Cm.astype(jnp.float32).reshape(B_, nch, L, N)
+
+    cums = jnp.cumsum(lac, axis=2)  # (B,nch,L,H)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    # intra-chunk: W[t,s,h] = exp(cums_t - cums_s), s <= t, batched over chunks
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nch,L,L,H)
+    W = jnp.exp(jnp.where(tril[None, None, :, :, None], diff, -jnp.inf))
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", CB[..., None] * W, xdtc)
+
+    # per-chunk state contributions + decays (batched)
+    dte = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,nch,L,H)
+    S_c = jnp.einsum("bclh,bcln,bclhp->bchpn", dte, Bc, xdtc)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (B,nch,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        d, s = inp  # (B,H), (B,H,P,N)
+        return d[..., None, None] * h + s, h  # emit the INCOMING state
+
+    h_fin, h_in = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll)
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nch,H,P,N) state entering chunk
+
+    # inter-chunk: carried state seen through C, batched over chunks
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", Cc, h_in) * jnp.exp(cums)[..., None]
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, h_fin
+
+
+def mamba2_prefill(p: Params, x: jnp.ndarray, *, expand: int, state: int,
+                   conv_k: int, chunk: int = 128, head_p: int = 64,
+                   compute_dtype=jnp.bfloat16,
+                   scan_fn=ssd_chunked) -> jnp.ndarray:
+    B, S, d = x.shape
+    d_in, H, P, N = ssm_dims(d, expand, state, head_p)
+    # NOTE (§Perf C2a, refuted): fusing these five projections via an
+    # apply-time weight concat COSTS more than the saved stream reads — the
+    # materialised concat + its bwd gradient assembly, recomputed under
+    # remat, outweigh 3 reads of h.  Kept separate.
+    z = linear(p["w_z"], x, compute_dtype=compute_dtype)
+    xs = linear(p["w_x"], x, compute_dtype=compute_dtype)
+    Bs = linear(p["w_B"], x, compute_dtype=compute_dtype)
+    Cs = linear(p["w_C"], x, compute_dtype=compute_dtype)
+    dt = linear(p["w_dt"], x, compute_dtype=compute_dtype)
+
+    conv = lambda v, c: jax.nn.silu(_causal_conv(
+        v.astype(jnp.float32), c["w"].astype(jnp.float32),
+        c["b"].astype(jnp.float32)))
+    xi = conv(xs, p["conv_x"]).reshape(B, S, H, P)
+    Bm = conv(Bs, p["conv_B"])
+    Cm = conv(Cs, p["conv_C"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, _ = scan_fn(xi, dt, A, Bm, Cm, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * p["norm_scale"].astype(jnp.float32)[None, None, :]
+    return linear(p["out_proj"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, cache: SSMCache, *, expand: int,
+                  state: int, conv_k: int, head_p: int = 64,
+                  compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, SSMCache]:
+    """x: (B, d) one token; O(1) state update (this is the long_500k path)."""
+    B, d = x.shape
+    d_in, H, P, N = ssm_dims(d, expand, state, head_p)
+    z = linear(p["w_z"], x, compute_dtype=compute_dtype)
+    xs = linear(p["w_x"], x, compute_dtype=compute_dtype)
+    Bs = linear(p["w_B"], x, compute_dtype=compute_dtype)
+    Cs = linear(p["w_C"], x, compute_dtype=compute_dtype)
+    dt = linear(p["w_dt"], x, compute_dtype=compute_dtype)
+
+    def conv_step(tail, v_t, c):
+        seq = jnp.concatenate([tail, v_t[:, None].astype(jnp.float32)], axis=1)
+        y = jnp.einsum("bkc,kc->bc", seq, c["w"].astype(jnp.float32))
+        return jax.nn.silu(y + c["b"].astype(jnp.float32)), seq[:, 1:]
+
+    xi, ncx = conv_step(cache.conv_x, xs, p["conv_x"])
+    Bm, ncB = conv_step(cache.conv_B, Bs, p["conv_B"])
+    Cm, ncC = conv_step(cache.conv_C, Cs, p["conv_C"])
+    xi = xi.reshape(B, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])  # (B,H)
+    h = (cache.h * a[:, :, None, None]
+         + jnp.einsum("bn,bhp->bhpn", Bm, xi * dt[..., None]))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + p["D"][None, :, None] * xi
+    y = y.reshape(B, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    y = y * p["norm_scale"].astype(jnp.float32)[None, :]
+    out = linear(p["out_proj"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+    return out, SSMCache(h=h, conv_x=ncx, conv_B=ncB, conv_C=ncC)
+
+
+def init_ssm_cache(batch: int, d_model: int, *, expand: int, state: int,
+                   conv_k: int, head_p: int = 64) -> SSMCache:
+    d_in, H, P, N = ssm_dims(d_model, expand, state, head_p)
+    return SSMCache(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, conv_k - 1, d_in), jnp.float32),
+        conv_B=jnp.zeros((batch, conv_k - 1, N), jnp.float32),
+        conv_C=jnp.zeros((batch, conv_k - 1, N), jnp.float32),
+    )

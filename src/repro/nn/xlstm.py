@@ -1,0 +1,209 @@
+"""xLSTM cells and blocks (arXiv:2405.04517): mLSTM (matrix memory,
+parallelisable) and sLSTM (scalar memory, hidden-to-hidden recurrence).
+
+mLSTM has both a parallel (attention-like, training/prefill) and a
+recurrent (decode) form; their equivalence is property-tested in
+tests/test_xlstm.py.  sLSTM is inherently sequential -> lax.scan over time.
+All gate/state math in f32 with the paper's max-stabiliser.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Params, init_linear, linear, normal_init
+from repro.nn.norms import init_rmsnorm, rmsnorm
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (B, H, P, P) matrix memory
+    n: jnp.ndarray  # (B, H, P) normaliser
+    m: jnp.ndarray  # (B, H) stabiliser
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    d = d_model
+    return {
+        "wq": init_linear(ks[0], d, d, dtype=dtype),
+        "wk": init_linear(ks[1], d, d, dtype=dtype),
+        "wv": init_linear(ks[2], d, d, dtype=dtype),
+        "w_i": init_linear(ks[3], d, n_heads, bias=True, dtype=jnp.float32),
+        "w_f": init_linear(ks[4], d, n_heads, bias=True, dtype=jnp.float32),
+        "w_o": init_linear(ks[5], d, d, bias=True, dtype=dtype),
+        "w_out": init_linear(ks[6], d, d, dtype=dtype),
+        "norm_scale": jnp.ones((d,), dtype),
+    }
+
+
+def mlstm_parallel(p: Params, x: jnp.ndarray, n_heads: int,
+                   compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x: (B, S, d). Parallel (quadratic) form for training/prefill."""
+    B, S, d = x.shape
+    H, P = n_heads, d // n_heads
+    q = linear(p["wq"], x, compute_dtype=compute_dtype).reshape(B, S, H, P).astype(jnp.float32)
+    k = linear(p["wk"], x, compute_dtype=compute_dtype).reshape(B, S, H, P).astype(jnp.float32)
+    v = linear(p["wv"], x, compute_dtype=compute_dtype).reshape(B, S, H, P).astype(jnp.float32)
+    it = linear(p["w_i"], x.astype(jnp.float32))  # (B,S,H) pre-activation
+    ft = linear(p["w_f"], x.astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(ft)
+    F = jnp.cumsum(logf, axis=1)  # (B,S,H)
+    # Dtil[b,t,s,h] = F_t - F_s + i_s  (s <= t)
+    Dt = F[:, :, None, :] - F[:, None, :, :] + it[:, None, :, :]
+    tril = jnp.tril(jnp.ones((S, S), bool))
+    Dt = jnp.where(tril[None, :, :, None], Dt, -jnp.inf)
+    m = jnp.max(Dt, axis=2)  # (B,S,H)
+    Dm = jnp.exp(Dt - m[:, :, None, :])
+    a = jnp.einsum("bthp,bshp->btsh", q, k) / math.sqrt(P)
+    Sm = a * Dm
+    num = jnp.einsum("btsh,bshp->bthp", Sm, v)
+    den = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=2)), jnp.exp(-m))  # (B,S,H)
+    h = num / den[..., None]
+    o = jax.nn.sigmoid(linear(p["w_o"], x.astype(jnp.float32)))
+    y = (h.reshape(B, S, d) * o)
+    y = y * p["norm_scale"].astype(jnp.float32)[None, None, :]
+    return linear(p["w_out"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, st: MLSTMState, n_heads: int,
+                 compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, MLSTMState]:
+    """x: (B, d) one token; recurrent matrix-memory update."""
+    B, d = x.shape
+    H, P = n_heads, d // n_heads
+    q = linear(p["wq"], x, compute_dtype=compute_dtype).reshape(B, H, P).astype(jnp.float32)
+    k = linear(p["wk"], x, compute_dtype=compute_dtype).reshape(B, H, P).astype(jnp.float32)
+    v = linear(p["wv"], x, compute_dtype=compute_dtype).reshape(B, H, P).astype(jnp.float32)
+    it = linear(p["w_i"], x.astype(jnp.float32))  # (B,H)
+    ft = linear(p["w_f"], x.astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st.m, it)
+    fp = jnp.exp(logf + st.m - m_new)
+    ip = jnp.exp(it - m_new)
+    C = fp[..., None, None] * st.C + ip[..., None, None] * (
+        v[..., :, None] * k[..., None, :])  # (B,H,P,P) v k^T
+    n = fp[..., None] * st.n + ip[..., None] * k
+    num = jnp.einsum("bhvp,bhp->bhv", C, q / math.sqrt(P))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q / math.sqrt(P))),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    o = jax.nn.sigmoid(linear(p["w_o"], x.astype(jnp.float32)))
+    y = h.reshape(B, d) * o
+    y = y * p["norm_scale"].astype(jnp.float32)[None, :]
+    out = linear(p["w_out"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+    return out, MLSTMState(C=C, n=n, m=m_new)
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int) -> MLSTMState:
+    P = d_model // n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, n_heads, P, P), jnp.float32),
+        n=jnp.zeros((batch, n_heads, P), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    P = d_model // n_heads
+    def rec(k):  # block-diagonal recurrent weights, (H, P, P)
+        return normal_init(k, (n_heads, P, P), jnp.float32, 1.0 / math.sqrt(P))
+    return {
+        "w_z": init_linear(ks[0], d_model, d_model, bias=True, dtype=jnp.float32),
+        "w_i": init_linear(ks[1], d_model, d_model, bias=True, dtype=jnp.float32),
+        "w_f": init_linear(ks[2], d_model, d_model, bias=True, dtype=jnp.float32),
+        "w_o": init_linear(ks[3], d_model, d_model, bias=True, dtype=jnp.float32),
+        "r_z": rec(ks[4]), "r_i": rec(ks[5]), "r_f": rec(ks[6]), "r_o": rec(ks[7]),
+        "norm_scale": jnp.ones((d_model,), dtype),
+    }
+
+
+def _rec_mm(r: jnp.ndarray, h: jnp.ndarray, H: int) -> jnp.ndarray:
+    B, d = h.shape
+    P = d // H
+    return jnp.einsum("bhp,hpq->bhq", h.reshape(B, H, P), r).reshape(B, d)
+
+
+def slstm_step(p: Params, x_t: jnp.ndarray, st: SLSTMState,
+               n_heads: int) -> Tuple[jnp.ndarray, SLSTMState]:
+    """One sLSTM step in f32. x_t: (B, d)."""
+    H = n_heads
+    xf = x_t.astype(jnp.float32)
+    zt = jnp.tanh(linear(p["w_z"], xf) + _rec_mm(p["r_z"], st.h, H))
+    it = linear(p["w_i"], xf) + _rec_mm(p["r_i"], st.h, H)
+    ft = linear(p["w_f"], xf) + _rec_mm(p["r_f"], st.h, H)
+    ot = jax.nn.sigmoid(linear(p["w_o"], xf) + _rec_mm(p["r_o"], st.h, H))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st.m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(logf + st.m - m_new)
+    c = fp * st.c + ip * zt
+    n = jnp.maximum(fp * st.n + ip, 1e-6)
+    h = ot * (c / n)
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_scan(p: Params, x: jnp.ndarray, n_heads: int,
+               compute_dtype=jnp.bfloat16,
+               st: SLSTMState | None = None) -> Tuple[jnp.ndarray, SLSTMState]:
+    """x: (B, S, d) -> (y, final_state); lax.scan over time.
+
+    The input projections W_{z,i,f,o} x (the FLOPs majority) are hoisted out
+    of the scan and computed as batched (B,S,d) matmuls; only the
+    hidden-to-hidden recurrence R h_{t-1} (block-diagonal, d*P per step)
+    stays sequential — both a real perf win and required for faithful
+    dry-run cost accounting (a while-loop body is counted once).
+    """
+    B, S, d = x.shape
+    H = n_heads
+    if st is None:
+        st = init_slstm_state(B, d)
+    xf = x.astype(jnp.float32)
+    zx = linear(p["w_z"], xf)
+    ix = linear(p["w_i"], xf)
+    fx = linear(p["w_f"], xf)
+    ox = linear(p["w_o"], xf)
+
+    def body(carry, gates_t):
+        zt_, it_, ft_, ot_ = gates_t
+        zt = jnp.tanh(zt_ + _rec_mm(p["r_z"], carry.h, H))
+        it = it_ + _rec_mm(p["r_i"], carry.h, H)
+        ft = ft_ + _rec_mm(p["r_f"], carry.h, H)
+        ot = jax.nn.sigmoid(ot_ + _rec_mm(p["r_o"], carry.h, H))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + carry.m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(logf + carry.m - m_new)
+        c = fp * carry.c + ip * zt
+        n = jnp.maximum(fp * carry.n + ip, 1e-6)
+        h = ot * (c / n)
+        return SLSTMState(c=c, n=n, h=h, m=m_new), h
+
+    gates = tuple(g.transpose(1, 0, 2) for g in (zx, ix, fx, ox))
+    st_fin, hs = jax.lax.scan(body, st, gates)
+    y = hs.transpose(1, 0, 2) * p["norm_scale"].astype(jnp.float32)[None, None, :]
+    return y.astype(compute_dtype), st_fin
+
+
+def init_slstm_state(batch: int, d_model: int) -> SLSTMState:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d_model), -1e30, jnp.float32))

@@ -1,0 +1,1 @@
+from repro.serving import collaborative, engine  # noqa: F401

@@ -1,0 +1,87 @@
+"""Collaborative monitor->trigger->correct serving (the paper's protocol,
+deployed):
+
+  device: tiny edge tower decodes every token, computes u_t (monitor head);
+          alarm candidate when u_t > gamma - margin.
+  server: large backbone; receives data ONLY on trigger, catches up its
+          KV/SSM cache on the shipped token backlog, returns the corrector
+          -s*sigma(v_t) so the device reports f_hat = u - s*sigma(v).
+
+CommsMeter reproduces the paper's communication-reduction metric; at pod
+scale the same trigger drives ``core.gating.compact_correction`` (static
+capacity) inside jit — this module is the request-level Python orchestrator.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import decomposition as deco
+from repro.core.gating import CommsMeter
+from repro.nn.module import linear
+from repro.serving.engine import ServeEngine
+
+
+class CollaborativeEngine:
+    def __init__(self, params: Dict, cfg: ArchConfig, batch: int, max_len: int):
+        self.cfg, self.m = cfg, cfg.monitor
+        self.params = params
+        self.edge = ServeEngine(params["edge"], deco.edge_arch(cfg), batch, max_len)
+        self.server = ServeEngine(params["server"], cfg, batch, max_len)
+        self.server_pos = 0           # how far the server cache has caught up
+        self.backlog: List[jnp.ndarray] = []  # tokens not yet shipped
+        # payload: one token id (4B) + edge score (4B) per element
+        self.comms = CommsMeter(bytes_per_request=8)
+        self._u_head = jax.jit(self._u_head_impl)
+        self._v_head = jax.jit(self._v_head_impl)
+
+    def _u_head_impl(self, params, hidden_t):
+        hd = params["u_head"]
+        feats = jnp.tanh(linear(hd["w_feat"], hidden_t.astype(jnp.float32)))
+        t = jax.nn.softplus(hd["raw_t"])
+        return feats @ hd["a"] + t
+
+    def _v_head_impl(self, params, hidden_t):
+        return linear(params["v_head"], hidden_t.astype(jnp.float32))[..., 0]
+
+    def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
+        """One monitoring step over the batch.  Returns u, fhat, triggered."""
+        m = self.m
+        _, hidden = self.edge.decode(tokens_t)
+        u = self._u_head(self.params, hidden)  # (B,)
+        self.backlog.append(tokens_t)
+        triggered = np.asarray(u > m.threshold - m.trigger_margin)
+        fhat = np.asarray(u).copy()
+        if triggered.any():
+            # ship backlog -> server catches up -> corrector for this step
+            backlog_len = len(self.backlog)
+            v = self._server_catchup()
+            corr = m.s * np.asarray(jax.nn.sigmoid(v))
+            fhat = np.where(triggered, fhat - corr, fhat)
+            self.comms.update(int(triggered.sum()) * backlog_len,
+                              tokens_t.shape[0])
+        else:
+            self.comms.update(0, tokens_t.shape[0])
+        return {"u": np.asarray(u), "fhat": fhat, "triggered": triggered}
+
+    def _server_catchup(self) -> jnp.ndarray:
+        v_hidden = None
+        for tok in self.backlog:
+            _, v_hidden = self.server.decode(tok)
+        self.backlog = []
+        self.server_pos = self.server.pos
+        return self._v_head(self.params, v_hidden)
+
+    def run(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
+        """token_stream: (B, S[,K]).  Returns stacked traces + comms report."""
+        S = token_stream.shape[1]
+        us, fhats, trigs = [], [], []
+        for t in range(S):
+            r = self.step(jnp.asarray(token_stream[:, t]))
+            us.append(r["u"]); fhats.append(r["fhat"]); trigs.append(r["triggered"])
+        return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
+                "triggered": np.stack(trigs, 1), "comms": self.comms.report()}

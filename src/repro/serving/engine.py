@@ -1,0 +1,79 @@
+"""Serving engine: batched autoregressive decode over the uniform backbone
+API, with greedy/temperature sampling.  Prefill is cache-building: prompt
+tokens are scanned through ``decode_step`` (shape-static, jit-once).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api as model_api
+
+
+class ServeEngine:
+    """Holds params + cache for one batched decode session."""
+
+    def __init__(self, params, cfg: ArchConfig, batch: int, max_len: int,
+                 rng: Optional[jax.Array] = None):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len = batch, max_len
+        self.cache = model_api.init_cache(cfg, batch, max_len)
+        self.pos = 0
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._step = jax.jit(self._step_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- jitted kernels ----------------------------------------------------
+    def _step_impl(self, params, cache, tokens, pos):
+        return model_api.decode_step(params, self.cfg, cache, tokens, pos)
+
+    def _prefill_impl(self, params, cache, tokens, pos0):
+        """tokens: (B, S0) (or (B,S0,K) audio); scans decode_step over S0."""
+        time_axis = 1
+
+        def body(carry, tok_t):
+            cache, pos = carry
+            logits, hidden, cache = model_api.decode_step(
+                params, self.cfg, cache, tok_t, pos)
+            return (cache, pos + 1), (logits, hidden)
+
+        toks = jnp.moveaxis(tokens, time_axis, 0)
+        (cache, pos), (logits, hidden) = jax.lax.scan(body, (cache, pos0), toks)
+        return cache, pos, logits[-1], jnp.moveaxis(hidden, 0, 1)
+
+    # -- public API ----------------------------------------------------------
+    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Feed the prompt; returns last-position logits."""
+        self.cache, pos, logits, _ = self._prefill(
+            self.params, self.cache, tokens, jnp.asarray(self.pos, jnp.int32))
+        self.pos = int(pos)
+        return logits
+
+    def decode(self, tokens_t: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One step; returns (logits, hidden)."""
+        logits, hidden, self.cache = self._step(
+            self.params, self.cache, tokens_t, jnp.asarray(self.pos, jnp.int32))
+        self.pos += 1
+        return logits, hidden
+
+    def sample(self, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompt: jnp.ndarray, n_new: int,
+                 temperature: float = 0.0) -> jnp.ndarray:
+        """prompt: (B, S0[,K]) -> generated ids (B, n_new[,K])."""
+        logits = self.prefill(prompt)
+        outs = []
+        tok = self.sample(logits, temperature)
+        for _ in range(n_new):
+            outs.append(tok)
+            logits, _ = self.decode(tok)
+            tok = self.sample(logits, temperature)
+        return jnp.stack(outs, axis=1)

@@ -1,0 +1,1 @@
+from repro.training import checkpoint, loop, optimizer, schedule  # noqa: F401

@@ -1,0 +1,56 @@
+"""Checkpointing without orbax: leaves are stored in an .npz keyed by their
+``jax.tree_util`` key-path string (+ a JSON manifest with the step/meta).
+Restore flattens the template with the same canonical order and rebuilds
+with ``tree_unflatten`` — this round-trips dicts, lists and NamedTuples
+(AdamState) alike, and the template supplies dtypes/structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(kp): np.asarray(jax.device_get(leaf))
+            for kp, leaf in flat}
+
+
+def save(path: str, step: int, params, opt_state=None,
+         meta: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "manifest.json"), "w") as fh:
+        json.dump({"step": int(step), "meta": meta or {}}, fh)
+
+
+def _restore_into(template, npz) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat:
+        key = jax.tree_util.keystr(kp)
+        arr = npz[key]
+        assert arr.shape == leaf.shape, (
+            f"checkpoint/template shape mismatch at {key}: "
+            f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load(path: str, params_template, opt_template=None
+         ) -> Tuple[int, Any, Optional[Any]]:
+    with open(os.path.join(path, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    params = _restore_into(params_template, np.load(os.path.join(path, "params.npz")))
+    opt = None
+    opt_file = os.path.join(path, "opt.npz")
+    if opt_template is not None and os.path.exists(opt_file):
+        opt = _restore_into(opt_template, np.load(opt_file))
+    return manifest["step"], params, opt

@@ -1,0 +1,119 @@
+"""Training loops.
+
+``make_train_step`` builds the jit-able collaborative LM step used both by
+the CPU examples (tiny configs) and the multi-pod launcher (full configs,
+via pjit in launch/train.py — same function, different shardings).
+
+``train_paper`` runs the paper-scale experiments (small MLPs, Adam, exactly
+the §4 recipe).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import decomposition as deco
+from repro.core.losses import collab_lm_loss, paper_loss
+from repro.training.optimizer import AdamW
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, *, monitor_weight: float = 1.0,
+                    safety_weight: float = 10.0) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        out = deco.collab_forward(params, cfg, batch)
+        parts = collab_lm_loss(out, batch, monitor_weight=monitor_weight,
+                               safety_weight=safety_weight)
+        return parts["total"], parts
+
+    def step(params, opt_state, batch):
+        (_, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        parts["grad_norm"] = gnorm
+        return params, opt_state, parts
+
+    return step
+
+
+def train_collab_lm(key, cfg: ArchConfig, batches: Iterator[Dict], *,
+                    steps: int, lr: float = 3e-4, log_every: int = 10,
+                    monitor_weight: float = 1.0, safety_weight: float = 10.0,
+                    log_fn: Callable = print) -> Tuple[Dict, list]:
+    """End-to-end driver (CPU scale).  Returns (params, history)."""
+    params = deco.init_collab_lm(key, cfg)
+    opt = AdamW(lr=lr)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt, monitor_weight=monitor_weight,
+                                   safety_weight=safety_weight))
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"], rec["wall_s"] = i, time.time() - t0
+            history.append(rec)
+            log_fn(f"step {i:5d}  loss {rec['total']:.4f}  lm {rec['lm']:.4f}  "
+                   f"monitor {rec['monitor']:.4f}  safety {rec['safety']:.5f}")
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale training (§4)
+# ---------------------------------------------------------------------------
+
+
+def train_paper(key, cfg, x: np.ndarray, f: np.ndarray, *, u_mode: str,
+                s: Optional[float] = None, monitor_n: Optional[int] = None,
+                n_modes: int = 0, u_dims=None, steps: int = 2000,
+                lr: float = 1e-2, batch: int = 256,
+                safety_weight: float = 0.0,
+                freeze_t: Optional[float] = None, seed: int = 0,
+                log_fn: Optional[Callable] = None) -> Tuple[Dict, Dict]:
+    """Trains f_hat = u - s*sigma(v) end-to-end with Adam (paper §4.1).
+
+    ``freeze_t``: if given, t is pinned to this value (Prop-2 calibration
+    mode) instead of being learned.
+    """
+    params = deco.init_paper_decomposition(key, cfg, u_mode=u_mode,
+                                           n_modes=n_modes, u_dims=u_dims)
+    if freeze_t is not None:
+        params["raw_t"] = jnp.asarray(deco._inv_softplus(max(freeze_t, 1e-6)),
+                                      jnp.float32)
+    opt = AdamW(lr=lr, clip_norm=0.0)
+    opt_state = opt.init(params)
+    xj, fj = jnp.asarray(x), jnp.asarray(f)
+    n = x.shape[0]
+    s_val = cfg.s if s is None else s
+
+    def loss_fn(p, xb, fb):
+        out = deco.paper_forward(p, xb, cfg, u_mode=u_mode, s=s_val,
+                                 monitor_n=monitor_n)
+        return paper_loss(out, fb, safety_weight=safety_weight)
+
+    @jax.jit
+    def step(p, st, xb, fb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, fb)
+        if freeze_t is not None:
+            grads = dict(grads)
+            grads["raw_t"] = jnp.zeros_like(grads["raw_t"])
+        p, st, _ = opt.update(grads, st, p)
+        return p, st, loss
+
+    rng = np.random.default_rng(seed)
+    loss = None
+    for i in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt_state, loss = step(params, opt_state, xj[idx], fj[idx])
+        if log_fn and i % 200 == 0:
+            log_fn(f"  paper-train step {i} loss {float(loss):.6f}")
+    out = deco.paper_forward(params, xj, cfg, u_mode=u_mode, s=s_val,
+                             monitor_n=monitor_n)
+    return params, {"final_loss": float(loss), "out": out}

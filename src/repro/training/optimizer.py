@@ -1,0 +1,86 @@
+"""Native-JAX optimizers (no optax in this environment): Adam / AdamW / SGD
+with global-norm clipping.  State trees mirror the param tree, so the same
+PartitionSpecs shard optimizer state (ZeRO-style) for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda t: jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), t)
+        return AdamState(count=jnp.zeros((), jnp.int32), m=zeros(params),
+                         v=zeros(params))
+
+    def update(self, grads, state: AdamState, params
+               ) -> Tuple[Any, AdamState, jnp.ndarray]:
+        """-> (new_params, new_state, grad_norm)."""
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(gf)) + 1e-12)
+        if self.clip_norm:
+            scale = jnp.minimum(1.0, self.clip_norm / gnorm)
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        bc1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(gf)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamState(count=count, m=new_m, v=new_v), gnorm
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params):
+        return AdamState(count=jnp.zeros((), jnp.int32),
+                         m=jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), params),
+                         v=None)
+
+    def update(self, grads, state, params):
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        new_m = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32), state.m, grads)
+        new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                             params, new_m)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)) + 1e-12)
+        return new_p, AdamState(count=count, m=new_m, v=None), gnorm

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: deliberately no xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real (single) device; only the dry-run
+# subprocess pins a placeholder device count.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

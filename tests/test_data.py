@@ -1,0 +1,77 @@
+"""Data generators."""
+import numpy as np
+
+from repro.configs import registry
+from repro.data import tokens as tok
+from repro.data.synthetic import (financial_series, financial_xy,
+                                  monitoring_target, paper_synthetic,
+                                  synthetic_residual)
+
+
+class TestPaperSynthetic:
+    def test_matches_formula(self):
+        x, f = paper_synthetic(0, 128, rho=0.9, n_modes=100)
+        i = np.arange(1, 101)
+        f_ref = np.cos(x * i[None, :]) @ (0.9 ** (i - 1))
+        np.testing.assert_allclose(f, f_ref, rtol=1e-5)
+        assert x.min() >= -3 and x.max() <= 3
+
+    def test_residual_consistency(self):
+        """f = truncated(n) + residual(n) exactly."""
+        x, f = paper_synthetic(1, 64)
+        n = 17
+        i = np.arange(1, n + 1)
+        trunc = np.cos(x * i[None, :]) @ (0.9 ** (i - 1))
+        np.testing.assert_allclose(trunc + synthetic_residual(x, n), f,
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestFinancial:
+    def test_panel_statistics(self):
+        panel = financial_series(0)
+        assert panel.shape == (2520, 30)
+        assert panel.min() >= 0.0 and panel.max() <= 1.0
+        x, f = financial_xy(panel)
+        assert x.shape == (2520, 29) and f.shape == (2520,)
+        # correlated market: average pairwise correlation is substantial
+        c = np.corrcoef(panel.T)
+        off = c[~np.eye(30, dtype=bool)]
+        assert off.mean() > 0.2
+
+    def test_deterministic(self):
+        np.testing.assert_array_equal(financial_series(7), financial_series(7))
+
+
+class TestMonitoringTarget:
+    def test_deterministic_given_tokens(self):
+        t = np.random.default_rng(0).integers(0, 512, (2, 64))
+        np.testing.assert_array_equal(monitoring_target(t, 512),
+                                      monitoring_target(t, 512))
+
+    def test_adverse_events_sparse_but_present(self):
+        t = np.random.default_rng(1).integers(0, 512, (8, 2048))
+        f = monitoring_target(t, 512)
+        frac = (f > 0).mean()
+        assert 0.005 < frac < 0.6
+
+
+class TestLMBatches:
+    def test_batch_contract(self):
+        cfg = registry.get_smoke("granite-8b")
+        b = next(tok.lm_batches(0, cfg, 4, 32))
+        assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+        assert b["tokens"].max() < cfg.vocab_size
+        assert b["monitor_target"].shape == (4, 32)
+        # labels are the shifted stream
+        b2 = next(tok.lm_batches(0, cfg, 4, 32))
+        np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+    def test_vlm_batch_has_image_embeds(self):
+        cfg = registry.get_smoke("llama-3.2-vision-11b")
+        b = next(tok.lm_batches(0, cfg, 2, 16))
+        assert b["image_embeds"].shape == (2, cfg.n_image_tokens, cfg.d_model)
+
+    def test_audio_batch_has_codebooks(self):
+        cfg = registry.get_smoke("musicgen-large")
+        b = next(tok.lm_batches(0, cfg, 2, 16))
+        assert b["tokens"].shape == (2, 16, cfg.n_codebooks)

@@ -1,0 +1,96 @@
+"""Core decomposition invariants (paper Eq. 1) at both scales."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig
+from repro.configs.paper_synthetic import SMOKE as SYN
+from repro.core import decomposition as deco
+from repro.models import api as model_api
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestSigma:
+    @given(st.lists(st.floats(-6, 6), min_size=1, max_size=64))
+    @settings(max_examples=30, deadline=None)
+    def test_range_and_inverse(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        for kind in ("sigmoid", "tanh01"):
+            y = deco.sigma(x, kind)
+            assert bool(jnp.all((y > 0) & (y < 1)))
+            x2 = deco.sigma_inv(y, kind)
+            np.testing.assert_allclose(x2, x, atol=1e-2)
+
+    def test_extreme_inputs_stay_in_closed_unit_interval(self):
+        x = jnp.asarray([-1e4, -30.0, 30.0, 1e4], jnp.float32)
+        for kind in ("sigmoid", "tanh01"):
+            y = deco.sigma(x, kind)
+            # f32 rounds the open interval shut at the extremes; the
+            # corrector stays bounded either way (s * y <= s)
+            assert bool(jnp.all((y >= 0) & (y <= 1)))
+            assert bool(jnp.all(jnp.isfinite(deco.sigma_inv(y, kind))))
+
+
+class TestStructuralSafety:
+    """u >= fhat ALWAYS (corr > 0 by construction), any params, any mode."""
+
+    @pytest.mark.parametrize("u_mode,kw", [("cosine", {"n_modes": 24}),
+                                           ("truncated", {}),
+                                           ("independent", {})])
+    def test_u_dominates_fhat(self, u_mode, kw):
+        p = deco.init_paper_decomposition(KEY, SYN, u_mode=u_mode, **kw)
+        x = jax.random.uniform(KEY, (512, 1), minval=-3.0, maxval=3.0)
+        out = deco.paper_forward(p, x, SYN, u_mode=u_mode)
+        assert bool(jnp.all(out["u"] >= out["fhat"]))
+        assert bool(jnp.all(out["corr"] > 0))
+        assert bool(jnp.all(out["corr"] < SYN.s))
+
+    def test_t_is_positive(self):
+        p = deco.init_paper_decomposition(KEY, SYN, u_mode="truncated")
+        x = jnp.zeros((4, 1))
+        out = deco.paper_forward(p, x, SYN)
+        assert float(out["t"]) > 0
+
+    def test_truncation_masks_basis(self):
+        """Features beyond n must not affect u (they never ship to device)."""
+        p = deco.init_paper_decomposition(KEY, SYN, u_mode="cosine", n_modes=24)
+        x = jax.random.uniform(KEY, (64, 1), minval=-3.0, maxval=3.0)
+        u1 = deco.paper_forward(p, x, SYN, u_mode="cosine", monitor_n=8)["u"]
+        p2 = dict(p)
+        p2["a"] = p["a"].at[8:].set(123.0)  # poison truncated coefficients
+        u2 = deco.paper_forward(p2, x, SYN, u_mode="cosine", monitor_n=8)["u"]
+        np.testing.assert_allclose(u1, u2, atol=1e-6)
+
+
+class TestCollabLM:
+    def test_structural_safety_at_lm_scale(self):
+        cfg = registry.get_smoke("granite-8b")
+        params = deco.init_collab_lm(KEY, cfg)
+        batch = model_api.sample_batch(KEY, cfg, ShapeConfig("t", 32, 2, "train"))
+        out = deco.collab_forward(params, cfg, batch)
+        assert bool(jnp.all(out["u"] >= out["fhat"]))
+        assert out["u"].shape == batch["tokens"].shape
+
+    def test_edge_tower_is_independent_of_server(self):
+        """Monitor score must not read server params (device autonomy)."""
+        cfg = registry.get_smoke("granite-8b")
+        params = deco.init_collab_lm(KEY, cfg)
+        batch = model_api.sample_batch(KEY, cfg, ShapeConfig("t", 32, 2, "train"))
+        u1 = deco.monitor_score(params, cfg, batch)
+        poisoned = dict(params)
+        poisoned["server"] = jax.tree.map(lambda l: l * 0 + 7.0, params["server"])
+        poisoned["v_head"] = jax.tree.map(lambda l: l * 0 + 7.0, params["v_head"])
+        u2 = deco.monitor_score(poisoned, cfg, batch)
+        np.testing.assert_allclose(u1, u2)
+
+    def test_edge_param_count_is_small(self):
+        from repro.nn.module import param_count
+        cfg = registry.get_smoke("qwen2.5-32b")
+        params = deco.init_collab_lm(KEY, cfg)
+        edge = param_count(params["edge"]) + param_count(params["u_head"])
+        server = param_count(params["server"])
+        assert edge < server / 2, "edge tower must be much smaller than server"

@@ -1,0 +1,68 @@
+"""Trigger gating + communication accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gating import (CommsMeter, compact_correction,
+                               masked_correction, trigger_mask)
+
+KEY = jax.random.PRNGKey(11)
+
+
+class TestMaskedCorrection:
+    @given(thr=st.floats(-1, 1), margin=st.floats(0, 1), seed=st.integers(0, 99))
+    @settings(max_examples=30, deadline=None)
+    def test_untriggered_rows_pass_through(self, thr, margin, seed):
+        k = jax.random.PRNGKey(seed)
+        u = jax.random.normal(k, (256,))
+        corr = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 1), (256,)))
+        fhat, mask = masked_correction(u, corr, thr, margin)
+        quiet = np.asarray(mask) == 0
+        np.testing.assert_allclose(np.asarray(fhat)[quiet], np.asarray(u)[quiet])
+        fired = ~quiet
+        np.testing.assert_allclose(np.asarray(fhat)[fired],
+                                   np.asarray(u - corr)[fired], atol=1e-6)
+
+
+class TestCompactCorrection:
+    def test_matches_masked_when_capacity_suffices(self):
+        u = jax.random.normal(KEY, (128,))
+        xs = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 4))
+        corrector = lambda b: jax.nn.sigmoid(b[:, 0])
+        fhat_c, mask_c, n = compact_correction(u, xs, corrector, 0.0, 0.25, 128)
+        corr_full = corrector(xs)
+        fhat_m, mask_m = masked_correction(u, corr_full, 0.0, 0.25)
+        np.testing.assert_allclose(fhat_c, fhat_m, atol=1e-6)
+        np.testing.assert_allclose(mask_c, mask_m)
+        assert int(n) == int(mask_m.sum())
+
+    def test_capacity_overflow_serves_most_urgent(self):
+        u = jnp.arange(32, dtype=jnp.float32)  # all triggered, 31 most urgent
+        xs = jnp.ones((32, 2))
+        fhat, mask, n = compact_correction(u, xs, lambda b: jnp.ones((b.shape[0],)),
+                                           0.0, 0.5, capacity=8)
+        served = np.where(np.asarray(mask) > 0)[0]
+        assert set(served) == set(range(24, 32)), "top-capacity by urgency"
+        assert int(n) == 32  # all triggered even if only 8 served
+
+    def test_untriggered_never_served(self):
+        u = jnp.array([-5.0, -4.0, 3.0, -6.0])
+        fhat, mask, n = compact_correction(
+            u, jnp.ones((4, 1)), lambda b: jnp.ones((b.shape[0],)), 0.0, 0.0, 4)
+        np.testing.assert_allclose(mask, [0, 0, 1, 0])
+        assert int(n) == 1
+
+
+class TestCommsMeter:
+    def test_reduction_math(self):
+        m = CommsMeter(bytes_per_request=8)
+        for _ in range(90):
+            m.update(0, 10)
+        for _ in range(10):
+            m.update(10, 10)
+        assert m.trigger_rate == 0.1
+        assert m.reduction == 10.0
+        rep = m.report()
+        assert rep["bytes_baseline"] == 1000 * 8
+        assert rep["bytes_sent"] == 100 * 8

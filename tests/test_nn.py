@@ -1,0 +1,142 @@
+"""Substrate invariants: prefill/decode consistency for every sequence-mixing
+layer (the property that makes a serving cache correct), mask semantics,
+RoPE shift-equivariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+from repro.nn import ssm as S
+from repro.nn import xlstm as X
+from repro.nn.rotary import apply_rope
+
+KEY = jax.random.PRNGKey(7)
+B, SQ, D = 2, 48, 96
+
+
+def x_seq(k=0, d=D):
+    return jax.random.normal(jax.random.fold_in(KEY, k), (B, SQ, d))
+
+
+class TestGQA:
+    def test_decode_matches_prefill(self):
+        p = A.init_gqa(KEY, D, 6, 2, 16)
+        kw = dict(n_heads=6, n_kv=2, head_dim=16, compute_dtype=jnp.float32)
+        x = x_seq()
+        y_ref = A.gqa_prefill(p, x, **kw)
+        cache = A.KVCache(jnp.zeros((B, SQ, 2, 16)), jnp.zeros((B, SQ, 2, 16)))
+        outs = []
+        for t in range(SQ):
+            y, cache = A.gqa_decode(p, x[:, t], cache, t, **kw)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.stack(outs, 1), y_ref, atol=1e-4)
+
+    def test_ring_buffer_matches_window_prefill(self):
+        win = 16
+        p = A.init_gqa(KEY, D, 4, 4, 24)
+        kw = dict(n_heads=4, n_kv=4, head_dim=24, compute_dtype=jnp.float32,
+                  window=win)
+        x = x_seq(1)
+        y_ref = A.gqa_prefill(p, x, **kw)
+        cache = A.KVCache(jnp.zeros((B, win, 4, 24)), jnp.zeros((B, win, 4, 24)))
+        outs = []
+        for t in range(SQ):
+            y, cache = A.gqa_decode(p, x[:, t], cache, t, **kw)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.stack(outs, 1), y_ref, atol=1e-4)
+
+    def test_causality(self):
+        """Future tokens must not influence past outputs."""
+        p = A.init_gqa(KEY, D, 4, 2, 16)
+        kw = dict(n_heads=4, n_kv=2, head_dim=16, compute_dtype=jnp.float32)
+        x = x_seq(2)
+        y1 = A.gqa_prefill(p, x, **kw)
+        x2 = x.at[:, -1].set(99.0)
+        y2 = A.gqa_prefill(p, x2, **kw)
+        np.testing.assert_allclose(y1[:, :-1], y2[:, :-1], atol=1e-5)
+
+
+class TestMLA:
+    def test_decode_matches_prefill(self):
+        p = A.init_mla(KEY, D, 4, q_lora=32, kv_lora=40, qk_nope=16,
+                       qk_rope=8, v_dim=16)
+        kw = dict(n_heads=4, qk_nope=16, qk_rope=8, v_dim=16,
+                  compute_dtype=jnp.float32)
+        x = x_seq(3)
+        y_ref = A.mla_prefill(p, x, **kw)
+        cache = A.MLACache(jnp.zeros((B, SQ, 40)), jnp.zeros((B, SQ, 8)))
+        outs = []
+        for t in range(SQ):
+            y, cache = A.mla_decode(p, x[:, t], cache, t, kv_lora=40, **kw)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.stack(outs, 1), y_ref, atol=1e-4)
+
+
+class TestMamba2:
+    def test_decode_matches_prefill(self):
+        p = S.init_mamba2(KEY, D, expand=2, state=16, head_p=32)
+        kw = dict(expand=2, state=16, conv_k=4, head_p=32,
+                  compute_dtype=jnp.float32)
+        x = x_seq(4)
+        y_ref = S.mamba2_prefill(p, x, chunk=16, **kw)
+        cache = S.init_ssm_cache(B, D, expand=2, state=16, conv_k=4, head_p=32)
+        outs = []
+        for t in range(SQ):
+            y, cache = S.mamba2_decode(p, x[:, t], cache, **kw)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.stack(outs, 1), y_ref, atol=1e-4)
+
+    def test_chunk_size_invariance(self):
+        p = S.init_mamba2(KEY, D, expand=2, state=16, head_p=32)
+        kw = dict(expand=2, state=16, conv_k=4, head_p=32,
+                  compute_dtype=jnp.float32)
+        x = x_seq(5)
+        y1 = S.mamba2_prefill(p, x, chunk=8, **kw)
+        y2 = S.mamba2_prefill(p, x, chunk=48, **kw)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+class TestXLSTM:
+    def test_mlstm_recurrent_matches_parallel(self):
+        p = X.init_mlstm(KEY, D, 4)
+        x = x_seq(6)
+        y_ref = X.mlstm_parallel(p, x, 4, compute_dtype=jnp.float32)
+        st = X.init_mlstm_state(B, D, 4)
+        outs = []
+        for t in range(SQ):
+            y, st = X.mlstm_decode(p, x[:, t], st, 4, compute_dtype=jnp.float32)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.stack(outs, 1), y_ref, atol=1e-4)
+
+    def test_slstm_scan_matches_step(self):
+        p = X.init_slstm(KEY, D, 4)
+        x = x_seq(7)
+        y_scan, st_fin = X.slstm_scan(p, x, 4, compute_dtype=jnp.float32)
+        st = X.init_slstm_state(B, D)
+        hs = []
+        for t in range(SQ):
+            h, st = X.slstm_step(p, x[:, t], st, 4)
+            hs.append(h)
+        y_step = jnp.stack(hs, 1) * p["norm_scale"][None, None, :]
+        np.testing.assert_allclose(y_scan, y_step, atol=1e-5)
+        np.testing.assert_allclose(st_fin.h, st.h, atol=1e-5)
+
+
+class TestRoPE:
+    def test_relative_position_invariance(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        q = jax.random.normal(KEY, (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 32))
+        def dot(i, j):
+            qi = apply_rope(q, jnp.array([[i]]))
+            kj = apply_rope(k, jnp.array([[j]]))
+            return float(jnp.sum(qi * kj))
+        assert dot(3, 1) == pytest.approx(dot(10, 8), abs=1e-4)
+        assert dot(0, 0) == pytest.approx(dot(5, 5), abs=1e-4)
+
+    def test_norm_preserved(self):
+        x = jax.random.normal(KEY, (2, 4, 3, 64))
+        y = apply_rope(x, jnp.arange(4)[None, :])
+        np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                                   jnp.linalg.norm(x, axis=-1), rtol=1e-5)

@@ -1,0 +1,135 @@
+"""Partition-rule engine invariants (AbstractMesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import decomposition as deco
+from repro.distributed import sharding as shd
+from repro.nn.module import iter_paths, map_with_path
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _specs_with_shapes(arch):
+    cfg = registry.get_full(arch)
+    shapes = jax.eval_shape(lambda: deco.init_collab_lm(KEY, cfg))
+    return cfg, shapes, shd.param_specs(shapes, MESH)
+
+
+@pytest.mark.parametrize("arch", registry.names())
+def test_all_specs_divide(arch):
+    """Every assigned spec axis must divide the corresponding dim — this IS
+    the 'sharding coherence' property the dry-run compiles prove at scale."""
+    _, shapes, specs = _specs_with_shapes(arch)
+    flat_shapes = dict(iter_paths(shapes))
+    flat_specs = dict(iter_paths(specs))
+    checked = 0
+    for path, spec in flat_specs.items():
+        leaf = flat_shapes[path]
+        if leaf is None or isinstance(spec, type(None)):
+            continue
+        assert len(spec) <= len(leaf.shape), path
+        padded = (None,) * (len(leaf.shape) - len(spec)) + tuple(spec)
+        for dim, ax in zip(leaf.shape, padded):
+            if ax is not None:
+                assert dim % MESH.shape[ax] == 0, (path, leaf.shape, spec)
+                checked += 1
+    assert checked > 0, "at least some leaves must be sharded"
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "deepseek-v3-671b",
+                                  "zamba2-7b", "xlstm-350m"])
+def test_monitor_tower_replicated(arch):
+    _, shapes, specs = _specs_with_shapes(arch)
+    for path, spec in iter_paths(specs):
+        if path.startswith(("edge/", "u_head/", "v_head/")):
+            assert all(a is None for a in tuple(spec)), (
+                f"monitor leaf {path} must replicate, got {spec}")
+
+
+def test_moe_expert_parallel_vs_tp_fallback():
+    """deepseek (256 experts) -> expert-parallel; mixtral (8) -> ff TP.
+    Compare the trailing (E, d, ff) axes (leaves may be layer-stacked)."""
+    _, ds_shapes, ds_specs = _specs_with_shapes("deepseek-v3-671b")
+    got = dict(iter_paths(ds_specs))
+    ds_gate = [v for k, v in got.items() if k.endswith("moe/w_gate")]
+    assert ds_gate and all(tuple(s)[-3:] == ("model", None, None)
+                           for s in ds_gate)
+
+    _, mx_shapes, mx_specs = _specs_with_shapes("mixtral-8x22b")
+    got = dict(iter_paths(mx_specs))
+    mx_gate = [v for k, v in got.items() if k.endswith("moe/w_gate")]
+    assert mx_gate and all(tuple(s)[-3:] == (None, None, "model")
+                           for s in mx_gate if len(s) >= 3)
+
+
+def test_batch_spec_handles_batch_one():
+    assert shd.batch_spec(MESH, (1, 524288), 1) == P()
+    assert shd.batch_spec(MESH, (256, 4096), 256) == P("data", None)
+    assert shd.batch_spec(MESH3, (256, 4096), 256) == P(("pod", "data"), None)
+
+
+def test_cache_specs_shard_batch_and_trailing():
+    from repro.models import api as model_api
+    cfg = registry.get_full("granite-8b")
+    cache = jax.eval_shape(lambda: model_api.init_cache(cfg, 128, 32768))
+    specs = shd.cache_specs(cache, MESH, 128)
+    k_spec = specs["blocks"].k
+    assert k_spec[1] == "data"          # batch axis
+    assert "model" in tuple(k_spec)     # head_dim (128 % 16 == 0)
+    assert k_spec[2] is None            # cache-time axis never sharded
+    # edge variant: no model axis anywhere
+    especs = shd.cache_specs(cache, MESH, 128, use_model=False)
+    assert "model" not in tuple(especs["blocks"].k)
+
+
+def test_cache_specs_time_mode():
+    """§Perf B1: mode='time' shards the cache seq axis, not head_dim."""
+    from repro.models import api as model_api
+    cfg = registry.get_full("granite-8b")
+    cache = jax.eval_shape(lambda: model_api.init_cache(cfg, 128, 32768))
+    specs = shd.cache_specs(cache, MESH, 128, mode="time")
+    k_spec = specs["blocks"].k  # (L, B, C, kv, hd)
+    assert k_spec[1] == "data"
+    assert k_spec[2] == "model"          # time axis sharded
+    assert all(ax is None for ax in tuple(k_spec)[3:])
+
+
+def test_opt_specs_zero1_widens_over_data():
+    """§Perf A3: ZeRO-1 moments pick up a 'data' axis where divisible."""
+    cfg = registry.get_full("deepseek-v3-671b")
+    shapes = jax.eval_shape(lambda: deco.init_collab_lm(KEY, cfg))
+    base = shd.opt_specs(shapes, MESH, zero1=False)
+    z1 = shd.opt_specs(shapes, MESH, zero1=True)
+    # expert weights: (E, d, ff) P('model', None, None) -> P('model','data',None)
+    def find(tree, frag):
+        return [(p, s) for p, s in iter_paths(tree)
+                if frag in p and isinstance(s, P)]
+    b = dict(find(base, "moe/w_gate"))
+    z = dict(find(z1, "moe/w_gate"))
+    assert b, "no moe/w_gate specs found"
+    for path in b:
+        zspec = z[path]
+        assert any(ax == "data" or (isinstance(ax, tuple) and "data" in ax)
+                   for ax in tuple(zspec)), (path, zspec)
+    # every widened spec still divides the shape
+    flat_p = dict(iter_paths(shapes))
+    for path, spec in iter_paths(z1):
+        if not isinstance(spec, P):
+            continue
+        leaf = flat_p.get(path)
+        if leaf is None or not hasattr(leaf, "shape"):
+            continue
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= MESH.shape[a]
+            assert dim % n == 0, (path, spec, leaf.shape)
