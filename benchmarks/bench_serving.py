@@ -1,6 +1,12 @@
-"""Collaborative serving bench: tokens/s of the edge monitor path vs the
-always-consult-server baseline, and the comms-reduction the trigger buys —
-the paper's Fig 4 claim, measured on the LM-scale system (smoke config).
+"""Collaborative serving bench: the batched lax.scan fast path vs the
+per-token Python loop (the seed's only mode), the edge-vs-server step
+costs, and the per-stream comms reduction the trigger buys (paper Fig 4).
+
+Two workloads:
+  * paper_synthetic (batch 8) — the LM analogue of the paper's synthetic
+    experiment at the paper's tiny scale; this is where the scan fast
+    path's dispatch-free decode shows its full tokens/sec advantage.
+  * granite-8b smoke — LM-scale sanity rows (compute-dominated on CPU).
 """
 from __future__ import annotations
 
@@ -12,31 +18,59 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.configs.paper_synthetic import SERVING as PAPER_SERVING
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import ServeEngine
 
 
-def run(csv: List[str]) -> None:
-    key = jax.random.PRNGKey(0)
-    cfg = registry.get_smoke("granite-8b")
-    params = deco.init_collab_lm(key, cfg)
-    stream = next(tok.lm_batches(0, cfg, 4, 48))["tokens"]
+def _bench_pair(name: str, cfg, batch: int, steps: int,
+                csv: List[str]) -> None:
+    """Per-token loop vs scan path on one config; appends two csv rows."""
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
 
-    # edge-only monitor throughput
-    eng = CollaborativeEngine(params, cfg, batch=4, max_len=64)
-    eng.step(jnp.asarray(stream[:, 0]))  # warm up jits
-    t0 = time.time()
-    for t in range(1, 33):
+    eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+    warm = 4  # covers trigger AND no-trigger branches (catchup jit included)
+    for t in range(warm):
         eng.step(jnp.asarray(stream[:, t]))
-    us_tok = (time.time() - t0) / 32 * 1e6
+    t0 = time.time()
+    for t in range(warm, steps):
+        eng.step(jnp.asarray(stream[:, t]))
+    dt_loop = time.time() - t0
+    tps_loop = batch * (steps - warm) / dt_loop
     rep = eng.comms.report()
-    csv.append(f"serving/collab_step,{us_tok:.1f},"
+    csv.append(f"serving/{name}_step,{dt_loop / (steps - warm) * 1e6:.1f},"
+               f"tokens_per_sec={tps_loop:.0f};"
                f"trigger_rate={rep['trigger_rate']:.3f};"
                f"reduction={rep['reduction_x']:.2f}x")
 
+    sc = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+    sc.run_scan(stream)  # compile
+    t0 = time.time()
+    res = sc.run_scan(stream)
+    dt_scan = time.time() - t0
+    tps_scan = batch * steps / dt_scan
+    per = res["comms"]["per_stream"]["reduction_x"]
+    csv.append(f"serving/{name}_scan,{dt_scan / steps * 1e6:.1f},"
+               f"tokens_per_sec={tps_scan:.0f};"
+               f"speedup_vs_loop={tps_scan / tps_loop:.1f}x;"
+               f"per_stream_reduction={np.round(per, 2).tolist()}")
+
+
+def run(csv: List[str]) -> None:
+    # paper-synthetic scale, batch 8: the scan fast path's headline number
+    _bench_pair("paper_synthetic", PAPER_SERVING, batch=8, steps=64, csv=csv)
+
+    # LM smoke scale
+    cfg = registry.get_smoke("granite-8b")
+    _bench_pair("collab", cfg, batch=4, steps=48, csv=csv)
+
     # server-only baseline (every token through the big tower)
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, 4, 48))["tokens"]
     se = ServeEngine(params["server"], cfg, batch=4, max_len=64)
     se.decode(jnp.asarray(stream[:, 0]))
     t0 = time.time()
@@ -45,7 +79,7 @@ def run(csv: List[str]) -> None:
     us_srv = (time.time() - t0) / 32 * 1e6
     csv.append(f"serving/server_only_step,{us_srv:.1f},edge_vs_server_note="
                f"smoke-scale")
-    for row in csv[-2:]:
+    for row in csv[-5:]:
         print(row, flush=True)
 
 

@@ -14,6 +14,7 @@ import time
 from typing import List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
 
 from benchmarks import (bench_kernels, bench_paper_fig2, bench_paper_fig3,
                         bench_paper_fig4, bench_roofline, bench_serving)

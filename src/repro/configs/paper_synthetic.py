@@ -5,7 +5,7 @@ from V's penultimate layer (Eq. 8).
 from dataclasses import dataclass, field
 from typing import Tuple
 
-from repro.configs.base import MonitorConfig
+from repro.configs.base import ArchConfig, MonitorConfig
 
 
 @dataclass(frozen=True)
@@ -32,4 +32,17 @@ FULL = PaperMLPConfig(
 SMOKE = PaperMLPConfig(
     name="paper-synthetic-smoke", in_dim=1, hidden=(8, 16, 24), n_basis=24,
     monitor_n=8, s=0.3, t_init=0.15, threshold=0.0, rho=0.8,
+)
+
+# LM analogue of the synthetic experiment at the paper's tiny scale (the
+# paper's U/V are small FC nets): 1-layer d64 server tower + matching edge
+# monitor.  This is the serving-bench workload for the trigger-gated
+# collaborative engine (bench_serving, examples).
+SERVING = ArchConfig(
+    name="paper-synthetic-serving", family="dense",
+    citation="paper §4.1 (LM-scale analogue of the synthetic experiment)",
+    n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+    vocab_size=256, tie_embeddings=True,
+    monitor=MonitorConfig(n_layers=1, d_model=64, n_heads=2, d_ff=128,
+                          n_features=16),
 )

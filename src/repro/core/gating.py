@@ -18,10 +18,11 @@ bytes actually shipped to the server vs. the ship-everything baseline.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def trigger_mask(u: jnp.ndarray, threshold: float, margin: float) -> jnp.ndarray:
@@ -63,23 +64,76 @@ def compact_correction(u: jnp.ndarray, xs: jnp.ndarray, corrector: Callable,
 
 @dataclass
 class CommsMeter:
-    """Accounts device->server traffic (paper Fig 4: '10x reduction')."""
+    """Accounts device->server traffic (paper Fig 4: '10x reduction').
+
+    Accounting is TOKEN-level: ``bytes_per_request`` is the payload of one
+    shipped token (id + edge score), and the baseline assumes every observed
+    token of every stream is shipped (pure on-server inference).
+
+    Two granularities:
+
+    * aggregate (``update``) — the legacy scalar API, still used by the
+      paper-scale benches where the batch is one logical stream;
+    * per-stream (``update_per_stream``) — each batch element is an
+      independent monitored stream with its own shipped/observed counters,
+      so the Fig-4 "reduction x" metric is measured per stream instead of
+      smeared across the batch.  A trigger on stream i charges only
+      stream i's backlog.
+
+    Invariant (asserted in tests): each token is shipped at most once, so
+    ``bytes_sent <= bytes_baseline`` always.
+    """
 
     bytes_per_request: int
+    n_streams: int = 1
     total_steps: int = 0
-    triggered: int = 0
+    triggered: int = 0        # trigger EVENTS (server consults)
+    tokens_shipped: int = 0   # tokens actually sent (drives bytes_sent)
+    tokens_sent: Optional[np.ndarray] = None   # (n_streams,) shipped tokens
+    tokens_seen: Optional[np.ndarray] = None   # (n_streams,) observed tokens
+
+    def __post_init__(self) -> None:
+        if self.tokens_sent is None:
+            self.tokens_sent = np.zeros(self.n_streams, np.int64)
+        if self.tokens_seen is None:
+            self.tokens_seen = np.zeros(self.n_streams, np.int64)
+        self._per_stream_used = False
 
     def update(self, n_triggered: int, n_total: int) -> None:
+        """Aggregate accounting (legacy scalar path): n_triggered streams
+        consulted the server this step, each shipping one token."""
         self.total_steps += int(n_total)
         self.triggered += int(n_triggered)
+        self.tokens_shipped += int(n_triggered)
+
+    def update_per_stream(self, sent, seen, events=None) -> None:
+        """Per-stream accounting.  sent/seen: (n_streams,) token counts for
+        this event (sent[i] = stream i's backlog shipped, 0 if untriggered;
+        seen[i] = new tokens observed on stream i, usually 1 per step).
+        ``events``: trigger-event count per stream for this update
+        (defaults to sent > 0 — right for a single step; pass explicitly
+        when folding a whole trace into one call)."""
+        sent = np.asarray(sent, np.int64)
+        seen = np.asarray(seen, np.int64)
+        if events is None:
+            events = (sent > 0).astype(np.int64)
+        self._per_stream_used = True
+        self.tokens_sent += sent
+        self.tokens_seen += seen
+        self.tokens_shipped += int(sent.sum())
+        self.triggered += int(np.asarray(events).sum())
+        self.total_steps += int(seen.sum())
 
     @property
     def trigger_rate(self) -> float:
+        """Fraction of stream-steps that consulted the server (the paper's
+        trigger frequency — NOT the shipped-token fraction; backlogs mean
+        one consult can ship many tokens)."""
         return self.triggered / max(self.total_steps, 1)
 
     @property
     def bytes_sent(self) -> int:
-        return self.triggered * self.bytes_per_request
+        return self.tokens_shipped * self.bytes_per_request
 
     @property
     def bytes_baseline(self) -> int:
@@ -90,8 +144,18 @@ class CommsMeter:
     def reduction(self) -> float:
         return self.bytes_baseline / max(self.bytes_sent, 1)
 
+    def per_stream_report(self) -> Dict[str, np.ndarray]:
+        sent_b = self.tokens_sent * self.bytes_per_request
+        base_b = self.tokens_seen * self.bytes_per_request
+        return {"bytes_sent": sent_b,
+                "bytes_baseline": base_b,
+                "reduction_x": base_b / np.maximum(sent_b, 1)}
+
     def report(self) -> Dict[str, float]:
-        return {"trigger_rate": self.trigger_rate,
-                "bytes_sent": self.bytes_sent,
-                "bytes_baseline": self.bytes_baseline,
-                "reduction_x": self.reduction}
+        rep = {"trigger_rate": self.trigger_rate,
+               "bytes_sent": self.bytes_sent,
+               "bytes_baseline": self.bytes_baseline,
+               "reduction_x": self.reduction}
+        if self._per_stream_used:  # only when per-stream accounting ran
+            rep["per_stream"] = self.per_stream_report()
+        return rep

@@ -6,8 +6,13 @@
 
 On a (B, S) score grid during batched serving this is 3-4 elementwise HBM
 round-trips if left to XLA fusion across jit boundaries; one VMEM pass here.
-Outputs: fhat, mask (f32), and a (2,)-counter [n_triggered, n_violations]
-accumulated across the grid (grid-sequential accumulation).
+
+TPU legality: flat (N,) score vectors are reshaped to 2D (rows, 128) tiles
+(the VPU lane width; f32 tiles are (8, 128)), padded with "quiet" values
+(u = gamma - margin, so the padding neither triggers nor counts as a safety
+violation).  The [n_triggered, n_violations] counters accumulate across the
+sequential TPU grid in SMEM.  ``interpret=None`` auto-selects the compiled
+path on TPU and the interpreter everywhere else.
 """
 from __future__ import annotations
 
@@ -18,14 +23,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+LANES = 128      # VPU lane width: last dim of every block
+SUBLANES = 8     # f32 min sublane tile
+
 
 def _combine_kernel(u_ref, v_ref, f_ref, fhat_ref, mask_ref, count_ref, *,
-                    s: float, threshold: float, margin: float, n_blocks: int):
+                    s: float, threshold: float, margin: float):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
-        count_ref[...] = jnp.zeros_like(count_ref)
+        count_ref[0] = 0.0
+        count_ref[1] = 0.0
 
     u = u_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
@@ -42,26 +51,43 @@ def _combine_kernel(u_ref, v_ref, f_ref, fhat_ref, mask_ref, count_ref, *,
 
 def monitor_combine(u: jnp.ndarray, v: jnp.ndarray, f: jnp.ndarray, *,
                     s: float, threshold: float = 0.0, margin: float = 0.25,
-                    block: int = 1024, interpret: bool = True):
-    """u, v, f: (N,) flat score vectors -> (fhat, mask, counts[2])."""
+                    block: int = 1024, interpret: bool | None = None):
+    """u, v, f: (N,) flat score vectors -> (fhat, mask, counts[2]).
+
+    ``block`` is the number of lanes processed per grid step (rounded to a
+    TPU-legal (rows, 128) tile).  ``interpret=None`` compiles on TPU and
+    falls back to the Pallas interpreter on CPU/GPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     N = u.shape[0]
-    blk = min(block, N)
-    assert N % blk == 0
-    nb = N // blk
+    rows = max(block // LANES, 1)
+    if not interpret:
+        rows = max(rows, SUBLANES)  # compiled path: full f32 tile
+    tile = rows * LANES
+    n_pad = (-N) % tile
+    quiet = jnp.float32(threshold - margin)  # no trigger, no violation
+    uf = jnp.concatenate([u.astype(jnp.float32), jnp.full((n_pad,), quiet)]) \
+        if n_pad else u.astype(jnp.float32)
+    vf = jnp.concatenate([v.astype(jnp.float32), jnp.zeros((n_pad,))]) \
+        if n_pad else v.astype(jnp.float32)
+    ff = jnp.concatenate([f.astype(jnp.float32), jnp.full((n_pad,), quiet)]) \
+        if n_pad else f.astype(jnp.float32)
+    n_rows_total = (N + n_pad) // LANES
+    u2, v2, f2 = (x.reshape(n_rows_total, LANES) for x in (uf, vf, ff))
+    nb = n_rows_total // rows
     kernel = functools.partial(_combine_kernel, s=s, threshold=threshold,
-                               margin=margin, n_blocks=nb)
+                               margin=margin)
+    blk2 = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
     fhat, mask, counts = pl.pallas_call(
         kernel,
         grid=(nb,),
-        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
-                  pl.BlockSpec((blk,), lambda i: (i,)),
-                  pl.BlockSpec((blk,), lambda i: (i,))],
-        out_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
-                   pl.BlockSpec((blk,), lambda i: (i,)),
-                   pl.BlockSpec((2,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32),
-                   jax.ShapeDtypeStruct((N,), jnp.float32),
+        in_specs=[blk2, blk2, blk2],
+        out_specs=[blk2, blk2,
+                   pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((n_rows_total, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rows_total, LANES), jnp.float32),
                    jax.ShapeDtypeStruct((2,), jnp.float32)],
         interpret=interpret,
-    )(u, v, f)
-    return fhat, mask, counts
+    )(u2, v2, f2)
+    return fhat.reshape(-1)[:N], mask.reshape(-1)[:N], counts

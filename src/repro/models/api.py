@@ -40,8 +40,13 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
     return _impl(cfg).init_cache(cfg, batch, seq_len)
 
 
-def decode_step(params, cfg: ArchConfig, cache, tokens_t, pos):
-    return _impl(cfg).decode_step(params, cfg, cache, tokens_t, pos)
+def decode_step(params, cfg: ArchConfig, cache, tokens_t, pos, *,
+                with_logits: bool = True):
+    """with_logits=False skips the unembed projection (monitoring-only
+    decode: the collaborative protocol consumes hidden scores, not
+    next-token logits — the tokens come from the monitored stream)."""
+    return _impl(cfg).decode_step(params, cfg, cache, tokens_t, pos,
+                                  with_logits=with_logits)
 
 
 # ---------------------------------------------------------------------------

@@ -129,7 +129,8 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int, image_tokens: int = 0)
     }
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos):
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos, *,
+                with_logits: bool = True):
     n_super, k, tail = _layout(cfg)
     h = embed(params["embed"], tokens_t, cdt(cfg))
     shared = params["shared"]
@@ -159,5 +160,5 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos):
                                          unroll=cfg.scan_unroll)
     h = rmsnorm(params["ln_f"], h[:, None], cfg.norm_eps)[:, 0]
     tab = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = unembed(tab, h, cdt(cfg))
+    logits = unembed(tab, h, cdt(cfg)) if with_logits else None
     return logits, h, {"ssm": new_ssm, "ssm_tail": new_tail, "attn": new_attn}

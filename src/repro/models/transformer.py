@@ -203,8 +203,10 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t: jnp.ndarray,
-                pos) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
-    """One decode step. tokens_t: (B,[K]) -> (logits, hidden_t, new_cache)."""
+                pos, *, with_logits: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """One decode step. tokens_t: (B,[K]) -> (logits, hidden_t, new_cache).
+    with_logits=False returns logits=None (monitoring-only decode)."""
     lay = _layer_layout(cfg)
     # Window handling: the cache was sized by decode_capacity; if it is
     # smaller than the logical context we run it as a ring buffer (SWA).
@@ -290,7 +292,7 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t: jnp.ndarray,
         new_cache = {"blocks": new_blocks}
 
     h = rmsnorm(params["ln_f"], h[:, None], cfg.norm_eps)[:, 0]
-    return _logits(params, cfg, h), h, new_cache
+    return (_logits(params, cfg, h) if with_logits else None), h, new_cache
 
 
 def cross_attn_decode(p: Params, x: jnp.ndarray, k_img: jnp.ndarray,

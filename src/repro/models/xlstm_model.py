@@ -104,7 +104,8 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int, image_tokens: int = 0)
     }
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos):
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos, *,
+                with_logits: bool = True):
     n_super, per, tail = _layout(cfg)
     h = embed(params["embed"], tokens_t, cdt(cfg))
 
@@ -135,4 +136,4 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens_t, pos):
 
     h = rmsnorm(params["ln_f"], h[:, None], cfg.norm_eps)[:, 0]
     tab = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    return unembed(tab, h, cdt(cfg)), h, new_cache
+    return (unembed(tab, h, cdt(cfg)) if with_logits else None), h, new_cache

@@ -72,12 +72,22 @@ def linear(p: Params, x: jnp.ndarray, *, compute_dtype=None) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _is_container(tree) -> bool:
+    """list/tuple nodes to descend into.  PartitionSpec subclasses tuple but
+    is a LEAF (a spec per array), as is any NamedTuple-style cache record —
+    descending into them mangles spec trees (e.g. 'embed/table/0')."""
+    if not isinstance(tree, (list, tuple)):
+        return False
+    from jax.sharding import PartitionSpec
+    return not (isinstance(tree, PartitionSpec) or hasattr(tree, "_fields"))
+
+
 def iter_paths(tree: Params, prefix: str = "") -> Iterator[Tuple[str, jnp.ndarray]]:
     """Yield ("a/b/c", leaf) pairs in deterministic order."""
     if isinstance(tree, dict):
         for k in sorted(tree.keys()):
             yield from iter_paths(tree[k], f"{prefix}/{k}" if prefix else str(k))
-    elif isinstance(tree, (list, tuple)):
+    elif _is_container(tree):
         for i, v in enumerate(tree):
             yield from iter_paths(v, f"{prefix}/{i}" if prefix else str(i))
     else:
@@ -89,7 +99,7 @@ def map_with_path(fn: Callable[[str, Any], Any], tree: Params, prefix: str = "")
     if isinstance(tree, dict):
         return {k: map_with_path(fn, v, f"{prefix}/{k}" if prefix else str(k))
                 for k, v in tree.items()}
-    if isinstance(tree, (list, tuple)):
+    if _is_container(tree):
         t = type(tree)
         return t(map_with_path(fn, v, f"{prefix}/{i}" if prefix else str(i))
                  for i, v in enumerate(tree))

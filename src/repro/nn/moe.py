@@ -154,7 +154,14 @@ def moe_apply(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
 
 
 def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()
+    try:  # jax >= 0.5 public API; 0.4.3x keeps it under jax._src.mesh
+        get = jax.sharding.get_abstract_mesh
+    except AttributeError:
+        try:
+            from jax._src.mesh import get_abstract_mesh as get
+        except ImportError:
+            get = lambda: None
+    m = get()
     if m is not None and getattr(m, "axis_names", None):
         return m
     try:  # legacy `with mesh:` context

@@ -1,19 +1,51 @@
 """Collaborative monitor->trigger->correct serving (the paper's protocol,
-deployed):
+deployed, batched over independent streams):
 
-  device: tiny edge tower decodes every token, computes u_t (monitor head);
-          alarm candidate when u_t > gamma - margin.
+  device: tiny edge tower decodes every token of every stream, computes
+          u_t (monitor head, truncated-basis Eq. 8 — same truncation as
+          ``core.decomposition.monitor_score``); alarm candidate when
+          u_t > gamma - margin.
   server: large backbone; receives data ONLY on trigger, catches up its
           KV/SSM cache on the shipped token backlog, returns the corrector
           -s*sigma(v_t) so the device reports f_hat = u - s*sigma(v).
 
-CommsMeter reproduces the paper's communication-reduction metric; at pod
-scale the same trigger drives ``core.gating.compact_correction`` (static
-capacity) inside jit — this module is the request-level Python orchestrator.
+PER-ELEMENT PROTOCOL.  Each batch element is an independent monitored
+stream with its own backlog and server catch-up position:
+
+  * ``server_pos[i]`` — how far the server cache has caught up on stream i.
+    A trigger on stream i ships ONLY stream i's backlog
+    (tokens server_pos[i]..t) and advances ONLY server_pos[i]; stream j's
+    backlog, cache rows, and communication accounting are bit-untouched
+    (``ServeEngine.step_at_fn`` masked per-element decode).
+  * the backlog itself is implicit: the engine keeps the token history
+    (B, max_len) on device, so stream i's backlog is
+    ``history[i, server_pos[i]:t+1]`` — no per-stream Python lists.
+  * ``CommsMeter`` accounts token-level bytes per stream: a trigger on
+    stream i charges len(backlog_i) tokens against stream i only, so the
+    paper's Fig-4 "reduction x" is measured per stream.  Each token ships
+    at most once => bytes_sent <= bytes_baseline invariantly.
+
+Two execution paths:
+
+  * ``step`` / ``run`` — the ONLINE protocol path: per-token, lazily
+    consults the server (the server cache stays cold until a trigger).
+    The fused Pallas ``kernels.monitor_combine`` op (via ``kernels.ops``)
+    computes fhat/trigger-mask/safety counters in one pass in the decode
+    hot loop.
+  * ``run_scan`` — the OFFLINE trace-evaluation fast path: one
+    ``jax.lax.scan`` over time (edge + server decoded in lockstep inside
+    jit), routing corrections through ``core.gating.compact_correction``
+    with static capacity (the MoE trick: only ``capacity`` rows hit the
+    corrector head per step).  Produces traces equivalent to the online
+    path (exact when capacity >= batch) at compiled-loop throughput, plus
+    the same per-stream communication accounting derived from the trigger
+    trace.  It does not mutate the engine's protocol state.
+
+Follow-up (ROADMAP): async server RPC so catch-up overlaps edge decode.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,63 +53,136 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import decomposition as deco
-from repro.core.gating import CommsMeter
+from repro.core.gating import CommsMeter, compact_correction
+from repro.kernels import ops
 from repro.nn.module import linear
 from repro.serving.engine import ServeEngine
 
+# payload: one token id (4B) + edge score (4B) per shipped token
+TOKEN_BYTES = 8
+
 
 class CollaborativeEngine:
-    def __init__(self, params: Dict, cfg: ArchConfig, batch: int, max_len: int):
+    def __init__(self, params: Dict, cfg: ArchConfig, batch: int, max_len: int,
+                 *, capacity: Optional[int] = None,
+                 monitor_n: Optional[int] = None):
         self.cfg, self.m = cfg, cfg.monitor
         self.params = params
+        self.batch, self.max_len = batch, max_len
         self.edge = ServeEngine(params["edge"], deco.edge_arch(cfg), batch, max_len)
         self.server = ServeEngine(params["server"], cfg, batch, max_len)
-        self.server_pos = 0           # how far the server cache has caught up
-        self.backlog: List[jnp.ndarray] = []  # tokens not yet shipped
-        # payload: one token id (4B) + edge score (4B) per element
-        self.comms = CommsMeter(bytes_per_request=8)
+        # static correction capacity for the compacted scan path; the full
+        # batch by default (exact protocol semantics)
+        self.capacity = batch if capacity is None else min(capacity, batch)
+        # truncation n for the serving u head (paper Eq. 8); defaults to the
+        # training-time n_features, overridable for truncation sweeps
+        self.monitor_n = self.m.n_features if monitor_n is None else monitor_n
+        # per-element protocol state
+        self.server_pos = np.zeros(batch, np.int64)
+        self.t = 0
+        tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
+        self._history = jnp.zeros((batch, max_len) + tok_tail, jnp.int32)
+        self.comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=batch)
         self._u_head = jax.jit(self._u_head_impl)
         self._v_head = jax.jit(self._v_head_impl)
+        self._record = jax.jit(self._record_impl)
+        self._catchup = jax.jit(self._catchup_impl)
+        self._scan = jax.jit(self._scan_impl)
 
+    # -- heads ---------------------------------------------------------------
     def _u_head_impl(self, params, hidden_t):
         hd = params["u_head"]
         feats = jnp.tanh(linear(hd["w_feat"], hidden_t.astype(jnp.float32)))
+        # Eq. 8 truncation: only the first n basis features reach the device
+        # — must match core.decomposition.monitor_score (serving u ==
+        # training u)
+        mask = (jnp.arange(feats.shape[-1]) < self.monitor_n).astype(jnp.float32)
         t = jax.nn.softplus(hd["raw_t"])
-        return feats @ hd["a"] + t
+        return feats @ (hd["a"] * mask) + t
 
     def _v_head_impl(self, params, hidden_t):
         return linear(params["v_head"], hidden_t.astype(jnp.float32))[..., 0]
 
+    # -- online (lazy, per-element) path -------------------------------------
+    def _record_impl(self, history, tokens_t, t):
+        return jax.lax.dynamic_update_slice_in_dim(
+            history, tokens_t[:, None].astype(history.dtype), t, axis=1)
+
+    def _catchup_impl(self, params, cache, history, server_pos, t, triggered, u):
+        """Masked per-element server catch-up + fused correction.
+
+        Each triggered stream i replays its own backlog
+        history[i, server_pos[i]:t+1] into the server cache at its own
+        positions; untriggered streams' cache rows stay bit-identical.
+        Rounds run to the LONGEST triggered backlog; streams that finish
+        early (or never started) are masked out per round.
+        """
+        B = triggered.shape[0]
+        step_at = self.server.get_step_at(with_logits=False)
+        n_rounds = jnp.max(jnp.where(triggered, t + 1 - server_pos, 0))
+
+        def round_body(r, carry):
+            cache, last_hidden = carry
+            pos = (server_pos + r).astype(jnp.int32)
+            active = triggered & (pos <= t)
+            idx = jnp.clip(pos, 0, self.max_len - 1)
+            idxe = idx.reshape((B,) + (1,) * (history.ndim - 1))
+            tok = jnp.take_along_axis(history, idxe, axis=1)[:, 0]
+            _, hidden, cache = step_at(params["server"], cache, tok, pos, active)
+            last_hidden = jnp.where(active[:, None], hidden.astype(jnp.float32),
+                                    last_hidden)
+            return cache, last_hidden
+
+        last_hidden = jnp.zeros((B, self.cfg.d_model), jnp.float32)
+        cache, last_hidden = jax.lax.fori_loop(
+            0, n_rounds, round_body, (cache, last_hidden))
+        v = self._v_head(params, last_hidden)
+        # fused combine (Pallas on TPU / oracle under "xla" impl): fhat,
+        # trigger mask and safety counters in one pass over the batch
+        if self.m.sigma == "sigmoid":
+            fhat_all, mask, _ = ops.monitor_combine(
+                u, v, u, s=self.m.s, threshold=self.m.threshold,
+                margin=self.m.trigger_margin)
+        else:
+            corr = self.m.s * deco.sigma(v, self.m.sigma)
+            fhat_all, mask = u - corr, triggered.astype(jnp.float32)
+        fhat = jnp.where(triggered, fhat_all, u)
+        return cache, v, fhat
+
     def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
         """One monitoring step over the batch.  Returns u, fhat, triggered."""
-        m = self.m
+        m, t, B = self.m, self.t, self.batch
+        if t >= self.max_len:
+            raise ValueError(f"stream longer than max_len={self.max_len}")
+        tokens_t = jnp.asarray(tokens_t)
+        self._history = self._record(self._history, tokens_t,
+                                     jnp.asarray(t, jnp.int32))
         _, hidden = self.edge.decode(tokens_t)
         u = self._u_head(self.params, hidden)  # (B,)
-        self.backlog.append(tokens_t)
         triggered = np.asarray(u > m.threshold - m.trigger_margin)
         fhat = np.asarray(u).copy()
         if triggered.any():
-            # ship backlog -> server catches up -> corrector for this step
-            backlog_len = len(self.backlog)
-            v = self._server_catchup()
-            corr = m.s * np.asarray(jax.nn.sigmoid(v))
-            fhat = np.where(triggered, fhat - corr, fhat)
-            self.comms.update(int(triggered.sum()) * backlog_len,
-                              tokens_t.shape[0])
+            # each triggered stream ships ITS backlog; others untouched
+            cache, v, fhat_j = self._catchup(
+                self.params, self.server.cache, self._history,
+                jnp.asarray(self.server_pos, jnp.int32),
+                jnp.asarray(t, jnp.int32), jnp.asarray(triggered), u)
+            self.server.cache = cache
+            fhat = np.asarray(fhat_j)
+            shipped = np.where(triggered, t + 1 - self.server_pos, 0)
+            self.comms.update_per_stream(shipped, np.ones(B, np.int64))
+            self.server_pos = np.where(triggered, t + 1, self.server_pos)
+            self.server.pos = int(self.server_pos.max())
         else:
-            self.comms.update(0, tokens_t.shape[0])
+            self.comms.update_per_stream(np.zeros(B, np.int64),
+                                         np.ones(B, np.int64))
+        self.t += 1
         return {"u": np.asarray(u), "fhat": fhat, "triggered": triggered}
 
-    def _server_catchup(self) -> jnp.ndarray:
-        v_hidden = None
-        for tok in self.backlog:
-            _, v_hidden = self.server.decode(tok)
-        self.backlog = []
-        self.server_pos = self.server.pos
-        return self._v_head(self.params, v_hidden)
-
     def run(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
-        """token_stream: (B, S[,K]).  Returns stacked traces + comms report."""
+        """Online protocol over a full stream: (B, S[,K]) -> stacked traces
+        + comms report.  Per-token Python loop; see ``run_scan`` for the
+        compiled offline path."""
         S = token_stream.shape[1]
         us, fhats, trigs = [], [], []
         for t in range(S):
@@ -85,3 +190,67 @@ class CollaborativeEngine:
             us.append(r["u"]); fhats.append(r["fhat"]); trigs.append(r["triggered"])
         return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
                 "triggered": np.stack(trigs, 1), "comms": self.comms.report()}
+
+    # -- offline scan fast path ----------------------------------------------
+    def _scan_impl(self, params, tokens):
+        """One lax.scan over time: edge + server decode in lockstep,
+        corrections routed through compact_correction (static capacity).
+        Scratch caches are built inside jit (zeros at the engine's max_len
+        capacity, so attention reduction widths match the online path
+        bit-for-bit) — no per-call host allocation."""
+        ecfg = deco.edge_arch(self.cfg)
+        cfg, m = self.cfg, self.m
+        B = tokens.shape[0]
+        from repro.models import api as model_api
+        edge_cache = model_api.init_cache(ecfg, B, self.max_len)
+        server_cache = model_api.init_cache(cfg, B, self.max_len)
+
+        def body(carry, tok_t):
+            edge_cache, server_cache, pos = carry
+            _, eh, edge_cache = model_api.decode_step(
+                params["edge"], ecfg, edge_cache, tok_t, pos,
+                with_logits=False)
+            u = self._u_head(params, eh)
+            _, sh, server_cache = model_api.decode_step(
+                params["server"], cfg, server_cache, tok_t, pos,
+                with_logits=False)
+
+            def corrector(buf):  # (capacity, d) gathered server hiddens
+                v = self._v_head(params, buf)
+                return m.s * deco.sigma(v, m.sigma)
+
+            fhat, served, _ = compact_correction(
+                u, sh.astype(jnp.float32), corrector, m.threshold,
+                m.trigger_margin, self.capacity)
+            trig = u > m.threshold - m.trigger_margin
+            return (edge_cache, server_cache, pos + 1), (u, fhat, trig, served)
+
+        toks = jnp.moveaxis(tokens, 1, 0)
+        carry = (edge_cache, server_cache, jnp.asarray(0, jnp.int32))
+        _, (u, fhat, trig, served) = jax.lax.scan(body, carry, toks)
+        # time-major -> batch-major
+        return (jnp.moveaxis(u, 0, 1), jnp.moveaxis(fhat, 0, 1),
+                jnp.moveaxis(trig, 0, 1), jnp.moveaxis(served, 0, 1))
+
+    def run_scan(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
+        """Offline trace evaluation: same protocol semantics as ``run``
+        (exact when capacity == batch; capacity-limited correction
+        otherwise), compiled into a single scan.  Scratch caches — the
+        engine's online protocol state (server laziness, comms meter) is
+        not mutated.  Comms are derived per stream from the trigger trace:
+        a trigger at time t ships the backlog since that stream's previous
+        trigger, so total shipped = last-trigger index + 1."""
+        tokens = jnp.asarray(token_stream)
+        B, S = tokens.shape[0], tokens.shape[1]
+        if S > self.max_len:
+            raise ValueError(f"stream longer than max_len={self.max_len}")
+        u, fhat, trig, served = self._scan(self.params, tokens)
+        trig_np = np.asarray(trig)
+        comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=B)
+        any_trig = trig_np.any(axis=1)
+        last = np.where(any_trig, S - 1 - np.argmax(trig_np[:, ::-1], axis=1), -1)
+        comms.update_per_stream(last + 1, np.full(B, S, np.int64),
+                                events=trig_np.sum(axis=1))
+        return {"u": np.asarray(u), "fhat": np.asarray(fhat),
+                "triggered": trig_np, "served": np.asarray(served),
+                "comms": comms.report()}

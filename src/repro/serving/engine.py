@@ -1,6 +1,13 @@
 """Serving engine: batched autoregressive decode over the uniform backbone
 API, with greedy/temperature sampling.  Prefill is cache-building: prompt
 tokens are scanned through ``decode_step`` (shape-static, jit-once).
+
+Besides the uniform-position ``decode``, the engine exposes a PER-ELEMENT
+decode (``decode_at`` / ``step_at_fn``): every batch element carries its own
+cache position and an active mask, so independent streams at heterogeneous
+depths advance in one SPMD call (inactive elements' cache rows are left
+bit-untouched).  This is the primitive the collaborative serving protocol
+uses for per-stream server catch-up.
 """
 from __future__ import annotations
 
@@ -11,6 +18,63 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
+
+
+def cache_batch_axes(cfg: ArchConfig, batch: int, max_len: int):
+    """Pytree of ints: the batch axis of every cache leaf.
+
+    Cache layouts differ per family (layer-stacked, sometimes doubly:
+    super-blocks x inner layers), so the batch axis is found structurally by
+    comparing ``eval_shape`` at two batch sizes — the axis that grows is the
+    batch axis.  No family-specific layout knowledge needed.
+    """
+    a = jax.eval_shape(lambda: model_api.init_cache(cfg, batch, max_len))
+    b = jax.eval_shape(lambda: model_api.init_cache(cfg, batch + 1, max_len))
+
+    def find(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        raise ValueError(f"no batch axis in cache leaf {x.shape}")
+
+    return jax.tree.map(find, a, b)
+
+
+def make_step_at(cfg: ArchConfig, axes, *, with_logits: bool = True):
+    """Pure per-element decode step with vector positions and active mask.
+
+    Returns ``step_at(params, cache, tokens_t, pos, active)`` where
+    tokens_t: (B,[K]), pos: (B,) int32 per-element positions, active: (B,)
+    bool.  Elements with active=False contribute dense (discarded) compute
+    but their cache rows are returned bit-unchanged — the standard SPMD
+    masked-semantics trick (shape-static, jit/scan-safe).
+    ``with_logits=False`` skips the unembed (monitoring-only decode).
+    """
+
+    def step_at(params, cache, tokens_t, pos, active):
+        def one(cache_elem, tok, p):
+            # cache_elem: leaves with the batch axis REMOVED (vmap);
+            # reinsert a singleton batch so decode_step sees its layout.
+            cache1 = jax.tree.map(jnp.expand_dims, cache_elem, axes)
+            logits, hidden, ncache = model_api.decode_step(
+                params, cfg, cache1, tok[None], p, with_logits=with_logits)
+            return (logits[0] if with_logits else None), hidden[0], \
+                jax.tree.map(jnp.squeeze, ncache, axes)
+
+        vm = jax.vmap(one, in_axes=(axes, 0, 0), out_axes=(0, 0, axes))
+        logits, hidden, new_cache = vm(cache, tokens_t,
+                                       jnp.asarray(pos, jnp.int32))
+
+        def merge(new, old, ax):
+            B = active.shape[0]
+            shape = [1] * new.ndim
+            shape[ax] = B
+            return jnp.where(jnp.reshape(active, shape), new, old)
+
+        cache = jax.tree.map(merge, new_cache, cache, axes)
+        return logits, hidden, cache
+
+    return step_at
 
 
 class ServeEngine:
@@ -25,6 +89,7 @@ class ServeEngine:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._step = jax.jit(self._step_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._step_at = {}  # built lazily (per-element decode), per variant
 
     # -- jitted kernels ----------------------------------------------------
     def _step_impl(self, params, cache, tokens, pos):
@@ -58,6 +123,31 @@ class ServeEngine:
         logits, hidden, self.cache = self._step(
             self.params, self.cache, tokens_t, jnp.asarray(self.pos, jnp.int32))
         self.pos += 1
+        return logits, hidden
+
+    def get_step_at(self, with_logits: bool = True) -> Callable:
+        """Pure per-element decode fn (params, cache, tokens, pos(B,),
+        active(B,)) -> (logits, hidden, cache); see ``make_step_at``.
+        Exposed so callers (collaborative catch-up) can embed it in their
+        own jitted loops."""
+        if with_logits not in self._step_at:
+            self._step_at[with_logits] = jax.jit(make_step_at(
+                self.cfg, cache_batch_axes(self.cfg, self.batch, self.max_len),
+                with_logits=with_logits))
+        return self._step_at[with_logits]
+
+    @property
+    def step_at_fn(self) -> Callable:
+        return self.get_step_at(True)
+
+    def decode_at(self, tokens_t: jnp.ndarray, pos: jnp.ndarray,
+                  active: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-element decode step: element i writes/reads its cache at
+        pos[i]; elements with active[i]=False are untouched.  The engine's
+        scalar ``self.pos`` is NOT advanced — per-element positions are the
+        caller's to track."""
+        logits, hidden, self.cache = self.step_at_fn(
+            self.params, self.cache, tokens_t, pos, active)
         return logits, hidden
 
     def sample(self, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:

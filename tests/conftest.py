@@ -6,6 +6,17 @@ import sys
 # subprocess pins a placeholder device count.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Gate the optional `hypothesis` test dependency (pyproject `test` extra):
+# hermetic environments without it fall back to the deterministic stub so
+# the property-test modules still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

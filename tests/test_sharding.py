@@ -2,15 +2,15 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
 from repro.core import decomposition as deco
 from repro.distributed import sharding as shd
 from repro.nn.module import iter_paths, map_with_path
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = shd.abstract_mesh((16, 16), ("data", "model"))
+MESH3 = shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 KEY = jax.random.PRNGKey(0)
 
