@@ -40,13 +40,35 @@ def masked_correction(u: jnp.ndarray, corr: jnp.ndarray, threshold: float,
 def compact_correction(u: jnp.ndarray, xs: jnp.ndarray, corrector: Callable,
                        threshold: float, margin: float,
                        capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Static-capacity gated correction over a flat batch.
+    """Static-capacity gated correction over a flat batch (the MoE
+    gather/scatter trick, applied to the paper's trigger).
 
     u: (N,) monitor scores; xs: (N, ...) server inputs; corrector maps a
     (capacity, ...) buffer to (capacity,) correction values (>= 0).
-    Rows are ranked by trigger urgency; the top-``capacity`` triggered rows
-    are corrected, the rest pass through as u (exactly the device-side
-    behaviour).  Returns (fhat, mask, n_triggered).
+    Returns (fhat, mask, n_triggered).
+
+    Contract (load-bearing for the serving scan path — see
+    ``serving/collaborative.py::run_scan``):
+
+    * **Static shapes.** ``capacity`` is a Python int, so the gather buffer
+      ``xs[sel]`` has shape (capacity, ...) regardless of how many rows
+      actually triggered — jit/scan-safe, recompilation-free.  Only
+      ``capacity`` rows ever reach the (expensive) corrector; that is the
+      paper's server-compute saving with fixed shapes.
+    * **Selection.** Rows are ranked by trigger urgency
+      ``u - (threshold - margin)``; non-triggered rows sort to +inf (the
+      back).  ``jnp.argsort`` is stable, so ties and the untriggered tail
+      resolve deterministically by row index — reruns are bit-identical.
+    * **Overflow is conservative.** If more than ``capacity`` rows
+      triggered, the LEAST urgent overflow rows pass through uncorrected as
+      plain ``u``.  Because the sign constraint makes u an upper bound
+      (fhat = u - s*sigma(v) <= u), dropping a correction can only keep a
+      warning raised, never suppress one — overflow errs toward false
+      positives, never false negatives.
+    * **Scatter.** Untriggered rows gathered into the buffer as padding
+      have their corrections zeroed by the ``valid`` mask before the
+      scatter-add, so their fhat stays exactly ``u`` (bit-identical, not
+      just approximately).
     """
     n = u.shape[0]
     urgency = u - (threshold - margin)  # > 0 == triggered
@@ -81,7 +103,18 @@ class CommsMeter:
       stream i's backlog.
 
     Invariant (asserted in tests): each token is shipped at most once, so
-    ``bytes_sent <= bytes_baseline`` always.
+    ``bytes_sent <= bytes_baseline`` always.  In async mode tokens are
+    charged at DISPATCH (when they leave the device), not at merge — the
+    wire is paid when the bytes move, so the invariant and the Fig-4
+    reduction are staleness-independent.
+
+    Async serving additionally meters the latency model (see
+    ``serving/async_rpc.py``): per-stream in-flight request counts, the
+    edge-loop stall time spent blocked on overdue replies, the server busy
+    time, and the derived ``overlap_ratio`` — the fraction of total
+    request wall time (compute + simulated network) hidden behind edge
+    decode.  Synchronous fallback => overlap_ratio ~ 0; a deep enough
+    pipeline => ~ 1.
     """
 
     bytes_per_request: int
@@ -91,13 +124,25 @@ class CommsMeter:
     tokens_shipped: int = 0   # tokens actually sent (drives bytes_sent)
     tokens_sent: Optional[np.ndarray] = None   # (n_streams,) shipped tokens
     tokens_seen: Optional[np.ndarray] = None   # (n_streams,) observed tokens
+    # -- async pipelining (filled by the Dispatcher) ------------------------
+    requests_inflight: Optional[np.ndarray] = None  # (n_streams,) in flight now
+    inflight_peak: int = 0     # max simultaneous in-flight requests
+    dispatched: int = 0        # async requests dispatched
+    merged_late: int = 0       # replies merged >= 1 step after their trigger
+    stall_s: float = 0.0       # edge-loop time blocked on overdue replies
+    server_busy_s: float = 0.0  # worker compute time
+    request_wall_s: float = 0.0  # dispatch -> reply-visible (incl. latency)
 
     def __post_init__(self) -> None:
         if self.tokens_sent is None:
             self.tokens_sent = np.zeros(self.n_streams, np.int64)
         if self.tokens_seen is None:
             self.tokens_seen = np.zeros(self.n_streams, np.int64)
+        if self.requests_inflight is None:
+            self.requests_inflight = np.zeros(self.n_streams, np.int64)
         self._per_stream_used = False
+        self._async_used = False
+        self._inflight_reqs = 0
 
     def update(self, n_triggered: int, n_total: int) -> None:
         """Aggregate accounting (legacy scalar path): n_triggered streams
@@ -123,6 +168,40 @@ class CommsMeter:
         self.tokens_shipped += int(sent.sum())
         self.triggered += int(np.asarray(events).sum())
         self.total_steps += int(seen.sum())
+
+    # -- async pipelining ----------------------------------------------------
+    def record_dispatch(self, mask) -> None:
+        """A catch-up request left the edge; ``mask``: (n_streams,) bool of
+        the streams it serves."""
+        self._async_used = True
+        self.requests_inflight += np.asarray(mask, bool)
+        self.dispatched += 1
+        self._inflight_reqs += 1
+        self.inflight_peak = max(self.inflight_peak, self._inflight_reqs)
+
+    def record_merge(self, mask, age: int) -> None:
+        """The reply for ``mask`` merged ``age`` edge steps after its
+        trigger (0 == synchronous fallback)."""
+        self.requests_inflight -= np.asarray(mask, bool)
+        self._inflight_reqs -= 1
+        if age > 0:
+            self.merged_late += 1
+
+    def record_stall(self, dt: float) -> None:
+        """Edge loop blocked ``dt`` seconds waiting for an overdue reply."""
+        self.stall_s += float(dt)
+
+    def record_server_busy(self, compute_s: float, wall_s: float) -> None:
+        self.server_busy_s += float(compute_s)
+        self.request_wall_s += float(wall_s)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of request wall time (server compute + network) hidden
+        behind edge decode; 1.0 when the pipeline never stalled."""
+        if self.request_wall_s <= 0.0:
+            return 1.0 if self.stall_s == 0.0 else 0.0
+        return max(0.0, 1.0 - self.stall_s / self.request_wall_s)
 
     @property
     def trigger_rate(self) -> float:
@@ -158,4 +237,15 @@ class CommsMeter:
                "reduction_x": self.reduction}
         if self._per_stream_used:  # only when per-stream accounting ran
             rep["per_stream"] = self.per_stream_report()
+        if self._async_used:       # only when the pipelined path ran
+            rep["async"] = {
+                "requests": self.dispatched,
+                "merged_late": self.merged_late,
+                "inflight_now": int(self.requests_inflight.sum()),
+                "inflight_peak": self.inflight_peak,
+                "stall_s": self.stall_s,
+                "server_busy_s": self.server_busy_s,
+                "request_wall_s": self.request_wall_s,
+                "overlap_ratio": self.overlap_ratio,
+            }
         return rep

@@ -1,11 +1,19 @@
 """Serving launcher: batched collaborative monitoring over token streams.
 
-The jitted serve step (server decode + corrector, edge decode + monitor,
-gated combine) is the same function the dry-run lowers for decode_32k /
-long_500k; here it runs on the host mesh with a reduced config.
+Two engines:
+
+  * the default jitted serve step (server decode + corrector, edge decode
+    + monitor, gated combine) — the same function the dry-run lowers for
+    decode_32k / long_500k; it runs on the host mesh with a reduced config.
+  * ``--engine collab`` — the trigger-gated ``CollaborativeEngine`` with
+    the lazy per-stream server and, with ``--mode async``, the pipelined
+    server catch-up (``--transport``, ``--max-staleness``, ``--latency-ms``
+    — see serving/async_rpc.py and docs/protocol.md).
 
 Run:  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \
           --smoke --tokens 64 --batch 4
+      PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \
+          --engine collab --mode async --latency-ms 20 --max-staleness 8
 """
 from __future__ import annotations
 
@@ -24,6 +32,38 @@ from repro.models import api as model_api
 from repro.training import checkpoint as ckpt
 
 
+def run_collab(args, cfg, params) -> None:
+    """Trigger-gated CollaborativeEngine serving (sync or async-pipelined)."""
+    from repro.serving.collaborative import CollaborativeEngine
+
+    B, S = args.batch, args.tokens
+    stream = next(tok.lm_batches(5, cfg, B, S))["tokens"]
+    eng = CollaborativeEngine(params, cfg, batch=B, max_len=S + 8)
+    t0 = time.time()
+    if args.mode == "async":
+        latency_s = (None if args.latency_ms is None
+                     else args.latency_ms * 1e-3)
+        res = eng.run_async(stream, transport=args.transport,
+                            max_staleness=args.max_staleness,
+                            latency_s=latency_s)
+    else:
+        res = eng.run(stream)
+    dt = (time.time() - t0) / S
+    print(f"{args.mode} collab engine: {S} steps x batch {B}:  "
+          f"{dt * 1e3:.1f} ms/step  ({B / dt:.1f} tok/s)")
+    for b in range(B):
+        print(f"  stream {b}: "
+              + "".join("!" if x else "." for x in res["triggered"][b]))
+    rep = res["comms"]
+    print(f"trigger rate {rep['trigger_rate']:.3f}  |  "
+          f"reduction {rep['reduction_x']:.1f}x")
+    if "async" in rep:
+        a = rep["async"]
+        print(f"async: {a['requests']} requests, {a['merged_late']} merged "
+              f"late, overlap {a['overlap_ratio']:.2f}, "
+              f"stall {a['stall_s'] * 1e3:.0f} ms")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=registry.names())
@@ -31,6 +71,13 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--engine", choices=("step", "collab"), default="step")
+    ap.add_argument("--mode", choices=("sync", "async"), default="sync")
+    ap.add_argument("--transport", default="stream",
+                    choices=("inproc", "stream", "thread", "mock_remote"))
+    ap.add_argument("--max-staleness", type=int, default=8)
+    ap.add_argument("--latency-ms", type=float, default=None,
+                    help="simulated RTT; default keeps the transport's own")
     args = ap.parse_args()
 
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_full(args.arch)
@@ -39,6 +86,10 @@ def main() -> None:
     if args.ckpt_dir:
         _, params, _ = ckpt.load(args.ckpt_dir, params)
         print(f"restored {args.ckpt_dir}")
+
+    if args.engine == "collab":
+        run_collab(args, cfg, params)
+        return
 
     B, cap = args.batch, args.tokens + 8
     ecfg = deco.edge_arch(cfg)

@@ -1,1 +1,1 @@
-from repro.serving import collaborative, engine  # noqa: F401
+from repro.serving import async_rpc, collaborative, engine  # noqa: F401

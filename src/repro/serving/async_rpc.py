@@ -1,0 +1,424 @@
+"""Async pipelined server catch-up: the dispatch/merge layer between the
+edge decode loop and the server corrector.
+
+The paper's deployment story is an edge monitor ``u`` that runs on EVERY
+token while the server corrector ``v`` is consulted only on trigger — so
+server latency (catch-up compute + network round trip) must be hideable
+behind edge decode.  This module provides the two halves of that overlap:
+
+  * ``ServerWorker`` — owns the server-side protocol state (params + the
+    batched KV/SSM cache) and applies ``CatchupRequest``s strictly in FIFO
+    order, so the cache replay is identical to the synchronous engine's.
+    Three transports:
+
+      - ``inproc``      — computes at dispatch, on the caller's thread.
+        Zero latency, fully deterministic; the functional transport used
+        by equivalence tests (it exercises the one-step-late merge policy
+        without real concurrency).
+      - ``stream``      — the side-stream transport: exploits JAX's async
+        dispatch.  The jitted catch-up is ENQUEUED from the caller's
+        thread (returns in well under a millisecond) and XLA's runtime
+        executes it concurrently with the edge loop's subsequent
+        ``decode_step`` dispatches; readiness is observed via
+        ``Array.is_ready()`` without blocking.  Successive requests chain
+        through the worker's cache arrays, so XLA serializes the replay
+        exactly like a real server while everything else overlaps.  This
+        is the preferred overlap transport on shared hosts (it uses XLA's
+        own scheduler — no OS-thread oversubscription) and the
+        single-device analogue of dispatching onto a second device via
+        ``jax.device_put`` (the worker exclusively owns its cache buffers,
+        so they are also donation-safe).  ``latency_s`` adds a simulated
+        wire delay on top of compute readiness.
+      - ``thread``      — a single daemon worker thread runs the jitted
+        catch-up.  The GIL is released during XLA execution, so the edge
+        loop overlaps the server replay; prefer ``stream`` on hosts with
+        few cores (two thread pools can thrash each other).
+      - ``mock_remote`` — ``thread`` plus a simulated network round trip:
+        a reply becomes visible ``latency_s`` after its compute finishes.
+        Latency is modelled as a concurrent wire delay (replies overlap in
+        flight); compute stays serialized like a real single server.
+
+  * ``Dispatcher`` — the edge-side bookkeeping: tracks in-flight requests,
+    polls/blocks for replies, and enforces the staleness window.
+
+STALENESS SEMANTICS (``max_staleness``):
+
+  * ``max_staleness == 0`` — strict synchronous fallback: the reply for a
+    trigger at step t is merged AT step t (the dispatcher blocks
+    immediately).  Bit-identical to ``CollaborativeEngine.step``.
+  * ``max_staleness == k >= 1`` — pipelined: a reply merges at the first
+    step AFTER its trigger once it has arrived ("corrections merge one
+    step late"), and no later than ``t + k`` — the dispatcher blocks the
+    edge loop only when the oldest in-flight request reaches age k.
+    The monitor path (u, trigger decision) NEVER waits on the server.
+
+Replies deliberately do not carry the server cache: the worker owns it for
+the duration of the async session and the engine re-adopts it once at
+``finish_async`` (after a full drain), which keeps cross-thread ownership
+trivial.  See ``docs/protocol.md`` for the full timeline diagrams.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRANSPORTS = ("inproc", "stream", "thread", "mock_remote")
+
+
+@dataclass
+class CatchupRequest:
+    """One trigger-step's worth of server work.
+
+    ``server_pos`` is the DISPATCH-time catch-up base: stream i's backlog is
+    ``history[i, server_pos[i]:t+1]``.  ``history`` is the engine's on-device
+    token history at dispatch; jnp arrays are immutable, so the snapshot is
+    free and stable while later edge steps keep recording.
+    """
+
+    req_id: int
+    t: int                      # trigger step (inclusive end of the backlog)
+    triggered: np.ndarray       # (B,) bool — which streams this request serves
+    server_pos: np.ndarray      # (B,) int — catch-up base per stream
+    history: jax.Array          # (B, max_len[, K]) token history snapshot
+    u: jax.Array                # (B,) monitor scores at the trigger step
+    wall_dispatch: float = 0.0  # time.monotonic() at dispatch
+
+
+@dataclass
+class CatchupReply:
+    req_id: int
+    t: int                      # the request's trigger step
+    triggered: np.ndarray
+    v: np.ndarray               # (B,) server scores (valid where triggered)
+    fhat: np.ndarray            # (B,) fused fhat from the DISPATCH-time u
+    server_time_s: float        # compute time inside the worker
+    wall_ready: float = 0.0     # when the reply became visible (incl. latency)
+
+
+class ServerWorker:
+    """Base transport: owns the server cache, applies requests in FIFO order.
+
+    ``catchup_fn(params, cache, history, server_pos, t, triggered, u)``
+    -> (cache, v, fhat) — the engine's jitted masked per-element catch-up.
+    """
+
+    kind = "inproc"
+
+    def __init__(self, catchup_fn: Callable, params: Any, cache: Any):
+        self._fn = catchup_fn
+        self._params = params
+        self.cache = cache
+        self._ready: deque = deque()  # replies visible to poll(), FIFO
+
+    # -- server side ---------------------------------------------------------
+    def _compute(self, req: CatchupRequest) -> CatchupReply:
+        t0 = time.monotonic()
+        cache, v, fhat = self._fn(
+            self._params, self.cache, req.history,
+            jnp.asarray(req.server_pos, jnp.int32),
+            jnp.asarray(req.t, jnp.int32),
+            jnp.asarray(req.triggered), req.u)
+        v, fhat = jax.block_until_ready((v, fhat))
+        self.cache = cache
+        done = time.monotonic()
+        return CatchupReply(req.req_id, req.t, np.asarray(req.triggered),
+                            np.asarray(v), np.asarray(fhat), done - t0,
+                            wall_ready=done)
+
+    # -- edge side -----------------------------------------------------------
+    def dispatch(self, req: CatchupRequest) -> None:
+        """inproc: compute now, on the caller's thread."""
+        self._ready.append(self._compute(req))
+
+    def poll(self) -> List[CatchupReply]:
+        """All replies that are ready, in FIFO order.  Non-blocking."""
+        out = list(self._ready)
+        self._ready.clear()
+        return out
+
+    def wait(self, req_id: int) -> List[CatchupReply]:
+        """Block until ``req_id`` is done; returns every reply up to and
+        including it, in FIFO order.  inproc computes at dispatch, so the
+        reply is already here."""
+        taken: List[CatchupReply] = []
+        while self._ready:
+            r = self._ready.popleft()
+            taken.append(r)
+            if r.req_id == req_id:
+                break
+        return taken
+
+    def close(self) -> None:
+        pass
+
+
+class StreamWorker(ServerWorker):
+    """Side-stream transport: overlap via JAX async dispatch, no threads.
+
+    ``dispatch`` enqueues the jitted catch-up and returns immediately with
+    async result arrays; XLA executes it concurrently with whatever the
+    edge loop dispatches next.  Requests chain through ``self.cache`` (an
+    async array after the first dispatch), so the replay order is enforced
+    by XLA's data dependencies — FIFO by construction.  ``poll`` observes
+    readiness with ``Array.is_ready()``; conversion to numpy happens only
+    at release, so nothing blocks early.
+
+    ``latency_s`` simulates the network: a reply becomes visible
+    ``latency_s`` after its compute is first OBSERVED ready (the edge loop
+    polls every step, so the observation error is at most one step).
+    """
+
+    kind = "stream"
+
+    def __init__(self, catchup_fn, params, cache, *, latency_s: float = 0.0):
+        super().__init__(catchup_fn, params, cache)
+        self.latency_s = float(latency_s)
+        self._pending: deque = deque()  # [req, v, fhat, ready_at | None]
+
+    def dispatch(self, req: CatchupRequest) -> None:
+        cache, v, fhat = self._fn(
+            self._params, self.cache, req.history,
+            jnp.asarray(req.server_pos, jnp.int32),
+            jnp.asarray(req.t, jnp.int32),
+            jnp.asarray(req.triggered), req.u)
+        self.cache = cache
+        self._pending.append([req, v, fhat, None])
+
+    def _release(self, item) -> CatchupReply:
+        req, v, fhat, ready_at = item
+        return CatchupReply(req.req_id, req.t, np.asarray(req.triggered),
+                            np.asarray(v), np.asarray(fhat),
+                            server_time_s=0.0,  # not observable without blocking
+                            wall_ready=ready_at + self.latency_s)
+
+    def _stamp_ready(self) -> None:
+        # stamp readiness for EVERY pending request, not just the head —
+        # the wire delays of distinct requests overlap (concurrent flights);
+        # compute is FIFO (cache-chained), so stop at the first not-ready
+        now = time.monotonic()
+        for item in self._pending:
+            if item[3] is None:
+                if not item[1].is_ready():
+                    break
+                item[3] = now
+
+    def poll(self) -> List[CatchupReply]:
+        self._stamp_ready()
+        out: List[CatchupReply] = []
+        while self._pending:
+            item = self._pending[0]
+            if item[3] is None or item[3] + self.latency_s > time.monotonic():
+                break
+            self._pending.popleft()
+            out.append(self._release(item))
+        return out
+
+    def wait(self, req_id: int) -> List[CatchupReply]:
+        out: List[CatchupReply] = []
+        while not out or out[-1].req_id < req_id:
+            item = self._pending.popleft()
+            if item[3] is None:
+                jax.block_until_ready(item[1])
+                item[3] = time.monotonic()
+                # later requests may have finished compute while we
+                # blocked: start their wire clocks NOW so their delays
+                # overlap this item's sleep (concurrent flights — same
+                # rule as poll)
+                self._stamp_ready()
+            dt = item[3] + self.latency_s - time.monotonic()
+            if dt > 0:              # still on the simulated wire
+                time.sleep(dt)
+            out.append(self._release(item))
+        return out
+
+    def close(self) -> None:
+        jax.block_until_ready(self.cache)
+
+
+class ThreadWorker(ServerWorker):
+    """Single worker thread; the edge loop overlaps the jitted catch-up.
+
+    ``latency_s`` models the network round trip: a reply becomes visible
+    ``latency_s`` after its compute finishes.  The delay is concurrent
+    (multiple replies can be "on the wire" at once) while compute stays
+    serialized — the realistic shape for a remote corrector, where RTT
+    dominates and the server itself is fast.
+    """
+
+    kind = "thread"
+
+    def __init__(self, catchup_fn, params, cache, *, latency_s: float = 0.0):
+        super().__init__(catchup_fn, params, cache)
+        self.latency_s = float(latency_s)
+        self._q: "queue.Queue[Optional[CatchupRequest]]" = queue.Queue()
+        self._cv = threading.Condition()
+        self._done: deque = deque()  # (reply, visible_at) in FIFO order
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            req = self._q.get()
+            if req is None:
+                return
+            reply = self._compute(req)
+            visible_at = reply.wall_ready + self.latency_s
+            reply.wall_ready = visible_at
+            with self._cv:
+                self._done.append((reply, visible_at))
+                self._cv.notify_all()
+
+    def dispatch(self, req: CatchupRequest) -> None:
+        self._q.put(req)
+
+    def poll(self) -> List[CatchupReply]:
+        now = time.monotonic()
+        out: List[CatchupReply] = []
+        with self._cv:
+            while self._done and self._done[0][1] <= now:
+                out.append(self._done.popleft()[0])
+        return out
+
+    def wait(self, req_id: int) -> List[CatchupReply]:
+        out: List[CatchupReply] = []
+        while not out or out[-1].req_id < req_id:
+            with self._cv:
+                while not self._done:
+                    if not self._thread.is_alive():
+                        raise RuntimeError(
+                            "server worker thread died (catch-up raised)")
+                    self._cv.wait(timeout=0.05)
+                reply, visible_at = self._done.popleft()
+            dt = visible_at - time.monotonic()
+            if dt > 0:              # still on the simulated wire
+                time.sleep(dt)
+            out.append(reply)
+        return out
+
+    def close(self) -> None:
+        if self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join()
+
+
+class MockRemoteWorker(ThreadWorker):
+    """``thread`` + a nonzero simulated network round trip."""
+
+    kind = "mock_remote"
+
+    def __init__(self, catchup_fn, params, cache, *, latency_s: float = 0.02):
+        super().__init__(catchup_fn, params, cache, latency_s=latency_s)
+
+
+def make_worker(transport: str, catchup_fn, params, cache, *,
+                latency_s: Optional[float] = None) -> ServerWorker:
+    """``latency_s=None`` keeps each transport's own default (0 for
+    stream/thread, 20 ms for mock_remote)."""
+    if transport == "inproc":
+        if latency_s:
+            raise ValueError("inproc transport has no latency model")
+        return ServerWorker(catchup_fn, params, cache)
+    kw = {} if latency_s is None else {"latency_s": latency_s}
+    if transport == "stream":
+        return StreamWorker(catchup_fn, params, cache, **kw)
+    if transport == "thread":
+        return ThreadWorker(catchup_fn, params, cache, **kw)
+    if transport == "mock_remote":
+        return MockRemoteWorker(catchup_fn, params, cache, **kw)
+    raise ValueError(f"unknown transport {transport!r}; one of {TRANSPORTS}")
+
+
+class Dispatcher:
+    """Edge-side request tracking + the staleness merge policy.
+
+    ``collect(now_t)`` is called once per edge step and returns the replies
+    to merge at this step, already in FIFO (request) order:
+
+      1. poll the worker (non-blocking) into a held buffer;
+      2. while the oldest in-flight request has age >= max_staleness,
+         BLOCK on it (this is the only place the edge loop ever waits, and
+         it never gates the monitor/trigger path — the engine calls
+         ``collect`` after u is computed);
+      3. release held replies that satisfy the merge window: age >= 1 in
+         pipelined mode (max_staleness >= 1), age >= 0 in strict sync mode.
+
+    Stall time (step 2) and per-request wall/compute times feed the
+    ``CommsMeter`` async accounting (overlap ratio, in-flight counts).
+    """
+
+    def __init__(self, worker: ServerWorker, *, max_staleness: int = 1,
+                 comms=None):
+        if max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        self.worker = worker
+        self.max_staleness = int(max_staleness)
+        self.comms = comms
+        self._inflight: deque = deque()   # CatchupRequest, FIFO
+        self._held: deque = deque()       # arrived, not yet merge-eligible
+        self._next_id = 0
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight) + len(self._held)
+
+    def dispatch(self, *, t: int, triggered: np.ndarray,
+                 server_pos: np.ndarray, history, u) -> CatchupRequest:
+        req = CatchupRequest(self._next_id, int(t), np.asarray(triggered),
+                             np.asarray(server_pos), history, u,
+                             wall_dispatch=time.monotonic())
+        self._next_id += 1
+        self._inflight.append(req)
+        if self.comms is not None:
+            self.comms.record_dispatch(req.triggered)
+        self.worker.dispatch(req)
+        return req
+
+    def _arrived(self, replies: List[CatchupReply]) -> None:
+        for r in replies:
+            req = self._inflight.popleft()
+            assert req.req_id == r.req_id, "worker must reply in FIFO order"
+            if self.comms is not None:
+                self.comms.record_server_busy(
+                    r.server_time_s, r.wall_ready - req.wall_dispatch)
+            self._held.append(r)
+
+    def collect(self, now_t: int) -> List[CatchupReply]:
+        self._arrived(self.worker.poll())
+        while self._inflight and now_t - self._inflight[0].t >= self.max_staleness:
+            t0 = time.monotonic()
+            replies = self.worker.wait(self._inflight[0].req_id)
+            if self.comms is not None:
+                self.comms.record_stall(time.monotonic() - t0)
+            self._arrived(replies)
+        min_age = 1 if self.max_staleness > 0 else 0
+        out: List[CatchupReply] = []
+        while self._held and now_t - self._held[0].t >= min_age:
+            r = self._held.popleft()
+            if self.comms is not None:
+                self.comms.record_merge(r.triggered, now_t - r.t)
+            out.append(r)
+        return out
+
+    def drain(self) -> List[CatchupReply]:
+        """Block for every outstanding reply (end of stream).  Tail replies
+        have no edge step left to report into; the engine folds them into
+        protocol state (server_pos) only."""
+        if self._inflight:
+            t0 = time.monotonic()
+            self._arrived(self.worker.wait(self._inflight[-1].req_id))
+            if self.comms is not None:
+                self.comms.record_stall(time.monotonic() - t0)
+        out = list(self._held)
+        self._held.clear()
+        if self.comms is not None:
+            for r in out:
+                self.comms.record_merge(r.triggered, self.max_staleness)
+        return out

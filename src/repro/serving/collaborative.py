@@ -25,13 +25,21 @@ stream with its own backlog and server catch-up position:
     paper's Fig-4 "reduction x" is measured per stream.  Each token ships
     at most once => bytes_sent <= bytes_baseline invariantly.
 
-Two execution paths:
+Three execution paths:
 
   * ``step`` / ``run`` — the ONLINE protocol path: per-token, lazily
     consults the server (the server cache stays cold until a trigger).
     The fused Pallas ``kernels.monitor_combine`` op (via ``kernels.ops``)
     computes fhat/trigger-mask/safety counters in one pass in the decode
-    hot loop.
+    hot loop.  Each trigger BLOCKS on the server catch-up.
+  * ``step_async`` / ``run_async`` — the PIPELINED online path: a trigger
+    dispatches the same masked catch-up to a ``ServerWorker`` (in-process,
+    worker-thread, or mock-remote transport — ``serving/async_rpc.py``)
+    and the edge loop keeps decoding; corrections merge one step late
+    (``fhat`` picks up the corrector at t+1..t+max_staleness) while the
+    monitor-only u/trigger path stays exact and never waits on the server.
+    ``max_staleness=0`` is the strict synchronous fallback, bit-identical
+    to ``step``.  See docs/protocol.md for the timelines.
   * ``run_scan`` — the OFFLINE trace-evaluation fast path: one
     ``jax.lax.scan`` over time (edge + server decoded in lockstep inside
     jit), routing corrections through ``core.gating.compact_correction``
@@ -40,8 +48,6 @@ Two execution paths:
     path (exact when capacity >= batch) at compiled-loop throughput, plus
     the same per-stream communication accounting derived from the trigger
     trace.  It does not mutate the engine's protocol state.
-
-Follow-up (ROADMAP): async server RPC so catch-up overlaps edge decode.
 """
 from __future__ import annotations
 
@@ -149,17 +155,26 @@ class CollaborativeEngine:
         fhat = jnp.where(triggered, fhat_all, u)
         return cache, v, fhat
 
-    def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
-        """One monitoring step over the batch.  Returns u, fhat, triggered."""
-        m, t, B = self.m, self.t, self.batch
+    def _monitor_prologue(self, tokens_t):
+        """The edge-only half of one step, shared by ``step`` and
+        ``step_async`` so the two stay bit-identical by construction:
+        record the token, decode on the edge tower, score u, decide the
+        trigger.  Touches no server state."""
+        t = self.t
         if t >= self.max_len:
             raise ValueError(f"stream longer than max_len={self.max_len}")
         tokens_t = jnp.asarray(tokens_t)
         self._history = self._record(self._history, tokens_t,
                                      jnp.asarray(t, jnp.int32))
         _, hidden = self.edge.decode(tokens_t)
-        u = self._u_head(self.params, hidden)  # (B,)
-        triggered = np.asarray(u > m.threshold - m.trigger_margin)
+        u = self._u_head(self.params, hidden)  # (B,) device array
+        triggered = np.asarray(u > self.m.threshold - self.m.trigger_margin)
+        return u, triggered
+
+    def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
+        """One monitoring step over the batch.  Returns u, fhat, triggered."""
+        t, B = self.t, self.batch
+        u, triggered = self._monitor_prologue(tokens_t)
         fhat = np.asarray(u).copy()
         if triggered.any():
             # each triggered stream ships ITS backlog; others untouched
@@ -188,6 +203,111 @@ class CollaborativeEngine:
         for t in range(S):
             r = self.step(jnp.asarray(token_stream[:, t]))
             us.append(r["u"]); fhats.append(r["fhat"]); trigs.append(r["triggered"])
+        return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
+                "triggered": np.stack(trigs, 1), "comms": self.comms.report()}
+
+    # -- async pipelined online path -----------------------------------------
+    def start_async(self, *, transport: str = "stream",
+                    max_staleness: int = 1,
+                    latency_s: Optional[float] = None,
+                    worker=None) -> None:
+        """Open an async serving session: hand the server cache to a
+        ``ServerWorker`` and set up the dispatch/merge layer.
+
+        transport: "inproc" | "stream" | "thread" | "mock_remote"
+        (see async_rpc; "stream" overlaps via JAX async dispatch).
+        max_staleness: merge window — 0 is the strict synchronous
+        fallback (bit-identical to ``step``); k >= 1 lets a reply land
+        1..k steps after its trigger, blocking the edge loop only at k.
+        latency_s: simulated server round trip (stream/thread/mock_remote);
+        None keeps the transport's own default.
+        """
+        from repro.serving import async_rpc
+        if getattr(self, "_dispatcher", None) is not None:
+            raise RuntimeError("async session already open")
+        if worker is None:
+            worker = async_rpc.make_worker(transport, self._catchup,
+                                           self.params, self.server.cache,
+                                           latency_s=latency_s)
+        self._worker = worker
+        self._dispatcher = async_rpc.Dispatcher(
+            worker, max_staleness=max_staleness, comms=self.comms)
+        # what has been SHIPPED (dispatched) per stream; merges move
+        # ``server_pos`` (what the protocol state reflects) up to this
+        self._dispatch_pos = self.server_pos.copy()
+
+    def step_async(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
+        """One pipelined monitoring step.  Identical monitor semantics to
+        ``step`` (u and the trigger decision never wait on the server);
+        corrections from earlier triggers merge into THIS step's fhat.
+        """
+        if getattr(self, "_dispatcher", None) is None:
+            raise RuntimeError("call start_async() first")
+        m, t, B = self.m, self.t, self.batch
+        u, triggered = self._monitor_prologue(tokens_t)
+        u_np = np.asarray(u)
+        # dispatch first so the synchronous fallback (max_staleness=0)
+        # merges this step's own reply below
+        if triggered.any():
+            shipped = np.where(triggered, t + 1 - self._dispatch_pos, 0)
+            self._dispatcher.dispatch(
+                t=t, triggered=triggered, server_pos=self._dispatch_pos,
+                history=self._history, u=u)
+            self.comms.update_per_stream(shipped, np.ones(B, np.int64))
+            self._dispatch_pos = np.where(triggered, t + 1,
+                                          self._dispatch_pos)
+        else:
+            self.comms.update_per_stream(np.zeros(B, np.int64),
+                                         np.ones(B, np.int64))
+        fhat = u_np.copy()
+        for r in self._dispatcher.collect(t):
+            if r.t == t:
+                # same-step merge (sync fallback): the fused fhat computed
+                # from this step's u — bit-identical to ``step``
+                fhat = np.where(r.triggered, r.fhat, fhat)
+            else:
+                # late merge: the stale corrector applied to TODAY's u.
+                # corr >= 0, so fhat <= u — staleness can only keep a
+                # warning raised, never suppress one (safety semantics)
+                corr = np.asarray(m.s * deco.sigma(jnp.asarray(r.v), m.sigma))
+                fhat = np.where(r.triggered, u_np - corr, fhat)
+            self.server_pos = np.where(r.triggered, r.t + 1, self.server_pos)
+        self.t += 1
+        return {"u": u_np, "fhat": fhat, "triggered": triggered}
+
+    def finish_async(self) -> None:
+        """Drain outstanding replies (pipeline tail: they update protocol
+        state but have no edge step left to report into), re-adopt the
+        worker's server cache, and close the session."""
+        d = getattr(self, "_dispatcher", None)
+        if d is None:
+            return
+        for r in d.drain():
+            self.server_pos = np.where(r.triggered, r.t + 1, self.server_pos)
+        self.server.cache = self._worker.cache
+        self.server.pos = int(self.server_pos.max())
+        self._worker.close()
+        self._dispatcher = self._worker = None
+
+    def run_async(self, token_stream: np.ndarray, *,
+                  transport: str = "stream", max_staleness: int = 1,
+                  latency_s: Optional[float] = None, worker=None
+                  ) -> Dict[str, np.ndarray]:
+        """Pipelined online protocol over a full stream: (B, S[,K]) ->
+        stacked traces + comms report (including the async overlap
+        accounting).  ``max_staleness=0`` reproduces ``run`` bit-for-bit;
+        u and the trigger trace are staleness-independent."""
+        self.start_async(transport=transport, max_staleness=max_staleness,
+                         latency_s=latency_s, worker=worker)
+        try:
+            S = token_stream.shape[1]
+            us, fhats, trigs = [], [], []
+            for t in range(S):
+                r = self.step_async(jnp.asarray(token_stream[:, t]))
+                us.append(r["u"]); fhats.append(r["fhat"])
+                trigs.append(r["triggered"])
+        finally:
+            self.finish_async()
         return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
                 "triggered": np.stack(trigs, 1), "comms": self.comms.report()}
 

@@ -21,12 +21,27 @@ from repro.models import api as model_api
 
 
 def cache_batch_axes(cfg: ArchConfig, batch: int, max_len: int):
-    """Pytree of ints: the batch axis of every cache leaf.
+    """Pytree of ints: the batch axis of every cache leaf (structural
+    discovery — no family-specific layout knowledge).
 
-    Cache layouts differ per family (layer-stacked, sometimes doubly:
-    super-blocks x inner layers), so the batch axis is found structurally by
-    comparing ``eval_shape`` at two batch sizes — the axis that grows is the
-    batch axis.  No family-specific layout knowledge needed.
+    Cache layouts differ per family: transformers stack (layers, B, S,
+    heads, d); hybrids stack doubly (super-blocks x inner layers) and mix
+    KV pages with SSM state rows; xLSTM carries (layers, B, heads, d, d)
+    matrix memories with no sequence axis at all.  Rather than teach this
+    module every layout, the batch axis is found structurally: build the
+    cache tree twice under ``jax.eval_shape`` (abstract — no allocation) at
+    batch sizes ``batch`` and ``batch+1``, and for each leaf take the FIRST
+    axis whose extent differs.  Probing with a delta of exactly 1 makes the
+    discovery unambiguous even when a leaf's other axes happen to equal the
+    batch size (e.g. batch == n_heads): those axes don't grow.
+
+    A leaf with no differing axis (per-layer scalars broadcast over the
+    batch) raises — such a leaf cannot be vmapped per-element and would
+    silently break the masked-decode contract below.
+
+    The result is consumed as the ``in_axes``/``out_axes`` tree for the
+    per-element vmap in ``make_step_at`` and as the axis map for its
+    masked cache merge.
     """
     a = jax.eval_shape(lambda: model_api.init_cache(cfg, batch, max_len))
     b = jax.eval_shape(lambda: model_api.init_cache(cfg, batch + 1, max_len))
@@ -45,10 +60,33 @@ def make_step_at(cfg: ArchConfig, axes, *, with_logits: bool = True):
 
     Returns ``step_at(params, cache, tokens_t, pos, active)`` where
     tokens_t: (B,[K]), pos: (B,) int32 per-element positions, active: (B,)
-    bool.  Elements with active=False contribute dense (discarded) compute
-    but their cache rows are returned bit-unchanged — the standard SPMD
-    masked-semantics trick (shape-static, jit/scan-safe).
-    ``with_logits=False`` skips the unembed (monitoring-only decode).
+    bool; ``axes`` is the ``cache_batch_axes`` tree.  This is the primitive
+    the collaborative protocol builds on: independent streams at
+    heterogeneous cache depths advance in ONE shape-static SPMD call.
+
+    Masking contract (load-bearing — tests assert it bitwise):
+
+    * every element is DECODED (dense, discarded compute — the standard
+      SPMD masked-semantics trick; there is no data-dependent shape, so
+      the function is jit/scan/fori_loop-safe and compiles once);
+    * elements with ``active[i] == False`` have their cache rows returned
+      **bit-unchanged** — not recomputed-and-equal but the original values,
+      selected leaf-wise by ``jnp.where`` along each leaf's batch axis.
+      A masked-out stream's attention reductions in later steps are
+      therefore exactly those of a stream that never decoded;
+    * ``hidden[i]`` for inactive elements is garbage (whatever the dense
+      decode produced) — callers must gate on ``active`` before use, as
+      the collaborative catch-up loop does;
+    * ``pos`` is NOT validated here: callers clip to [0, max_len) (inactive
+      lanes may carry clipped dummy positions, see
+      ``collaborative.CollaborativeEngine._catchup_impl``).
+
+    Mechanically each element is decoded at singleton batch via ``vmap``
+    over the cache's discovered batch axes: the vmapped body re-inserts a
+    size-1 batch axis so ``model_api.decode_step`` sees its native layout,
+    then squeezes it back out.  ``with_logits=False`` skips the unembed
+    projection (monitoring-only decode — the protocol consumes hidden
+    scores, not next-token logits).
     """
 
     def step_at(params, cache, tokens_t, pos, active):

@@ -1,0 +1,39 @@
+"""Documentation snippets must execute (the CI docs job, run in tier-1
+too so a broken README never lands).  tools/check_docs.py executes every
+fenced ```python block in README.md and docs/*.md headlessly."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_doc_files_exist():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "protocol.md").exists()
+
+
+def test_docs_have_runnable_snippets():
+    """The docs surface must contain executable examples, not just prose."""
+    n_runnable = 0
+    for path in check_docs.doc_files():
+        for _, info, _ in check_docs.iter_blocks(path):
+            if "no-run" not in info:
+                n_runnable += 1
+    assert n_runnable >= 2, "README + protocol.md must keep live snippets"
+
+
+@pytest.mark.slow
+def test_doc_snippets_execute():
+    """Run the checker exactly as CI does (subprocess: fresh interpreter,
+    no state leaking from the test session)."""
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"doc snippets failed:\n{proc.stdout}\n{proc.stderr}"

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import registry
 from repro.core import decomposition as deco
@@ -263,3 +264,150 @@ class TestBatchedScanPath:
         eng_full = CollaborativeEngine(params, cfg, batch=2, max_len=16)
         res_full = eng_full.run(stream)
         assert not np.allclose(res["u"], res_full["u"])
+
+
+class TestAsyncPipelinedEngine:
+    """The pipelined online path (serving/async_rpc.py): strict-sync
+    fallback bit-identity, staleness-independent monitor path, one-step-late
+    merge semantics, and comms/server state consistency."""
+
+    def _setup(self, threshold=0.1, batch=3, length=16):
+        cfg = registry.get_smoke("granite-8b")
+        cfg = cfg.replace(monitor=cfg.monitor.__class__(
+            **{**cfg.monitor.__dict__, "threshold": threshold,
+               "trigger_margin": 0.0}))
+        params = deco.init_collab_lm(KEY, cfg)
+        stream = next(tok.lm_batches(0, cfg, batch, length))["tokens"]
+        return cfg, params, stream
+
+    def test_sync_fallback_bit_identical_to_run(self):
+        """max_staleness=0 is the strict synchronous engine: same traces,
+        same comms, same server cache — bit for bit."""
+        cfg, params, stream = self._setup()
+        B = stream.shape[0]
+        sync = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        r1 = sync.run(stream)
+        a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        r0 = a.run_async(stream, transport="inproc", max_staleness=0)
+        assert 0.0 < r1["triggered"].mean() < 1.0, "need mixed triggers"
+        np.testing.assert_array_equal(r0["u"], r1["u"])
+        np.testing.assert_array_equal(r0["fhat"], r1["fhat"])
+        np.testing.assert_array_equal(r0["triggered"], r1["triggered"])
+        assert r0["comms"]["bytes_sent"] == r1["comms"]["bytes_sent"]
+        assert r0["comms"]["trigger_rate"] == r1["comms"]["trigger_rate"]
+        np.testing.assert_array_equal(
+            r0["comms"]["per_stream"]["bytes_sent"],
+            r1["comms"]["per_stream"]["bytes_sent"])
+        np.testing.assert_array_equal(a.server_pos, sync.server_pos)
+        for x, y in zip(jax.tree.leaves(a.server.cache),
+                        jax.tree.leaves(sync.server.cache)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_sync_fallback_matches_run_scan(self):
+        """Acceptance: max_staleness=0 vs the offline scan — u/trigger
+        bit-identical; fhat to vmap-vs-batch matmul rounding (the same
+        tolerance the sync engine itself is held to vs the scan)."""
+        cfg, params, stream = self._setup()
+        B = stream.shape[0]
+        scan = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        rs = scan.run_scan(stream)
+        a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        r0 = a.run_async(stream, transport="inproc", max_staleness=0)
+        np.testing.assert_array_equal(r0["u"], rs["u"])
+        np.testing.assert_array_equal(r0["triggered"], rs["triggered"])
+        np.testing.assert_allclose(r0["fhat"], rs["fhat"], atol=1e-6)
+
+    @settings(max_examples=5, deadline=None)
+    @given(staleness=st.integers(min_value=0, max_value=3),
+           threshold=st.floats(min_value=-0.3, max_value=0.3))
+    def test_monitor_path_staleness_independent(self, staleness, threshold):
+        """Property (safety): u and the trigger trace NEVER depend on the
+        staleness window — the monitor path does not wait on the server —
+        and corrections only ever lower fhat below u."""
+        cfg, params, stream = self._setup(threshold=threshold, batch=2,
+                                          length=8)
+        scan = CollaborativeEngine(params, cfg, batch=2, max_len=16)
+        rs = scan.run_scan(stream)
+        a = CollaborativeEngine(params, cfg, batch=2, max_len=16)
+        ra = a.run_async(stream, transport="inproc", max_staleness=staleness)
+        np.testing.assert_array_equal(ra["u"], rs["u"])
+        np.testing.assert_array_equal(ra["triggered"], rs["triggered"])
+        assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
+
+    def test_corrections_merge_one_step_late(self):
+        """Pipelined semantics: with an always-triggering monitor the
+        correction computed for step t lands in fhat at step t+1 (applied
+        to step t+1's u); step 0 reports the uncorrected u."""
+        cfg, params, stream = self._setup(threshold=0.5, batch=2, length=10)
+        stub = jax.jit(lambda p, h: jnp.ones(h.shape[0], jnp.float32))
+        sync = CollaborativeEngine(params, cfg, batch=2, max_len=16)
+        sync._u_head = stub
+        r1 = sync.run(stream)
+        assert r1["triggered"].all()
+        corr_sync = r1["u"] - r1["fhat"]  # s*sigma(v_t) per step
+        assert (corr_sync > 0).any(), "corrector must actually fire"
+
+        a = CollaborativeEngine(params, cfg, batch=2, max_len=16)
+        a._u_head = stub
+        ra = a.run_async(stream, transport="inproc", max_staleness=2)
+        assert ra["triggered"].all()
+        # step 0: no reply merged yet -> monitor-only report
+        np.testing.assert_array_equal(ra["fhat"][:, 0], ra["u"][:, 0])
+        # step t>=1: yesterday's corrector applied to today's u
+        np.testing.assert_allclose(
+            ra["fhat"][:, 1:], ra["u"][:, 1:] - corr_sync[:, :-1], atol=1e-6)
+
+    def test_async_transports_agree_and_comms_invariants(self):
+        """stream/thread/mock_remote transports under simulated latency:
+        identical monitor traces, identical shipped bytes (charged at
+        dispatch, so staleness-independent), bytes invariant, clean
+        in-flight teardown, and the final server cache matches the
+        synchronous engine's."""
+        cfg, params, stream = self._setup()
+        B = stream.shape[0]
+        sync = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        r1 = sync.run(stream)
+        for transport, latency in (("stream", 0.003), ("thread", 0.003),
+                                   ("mock_remote", 0.003)):
+            a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+            ra = a.run_async(stream, transport=transport, latency_s=latency,
+                             max_staleness=4)
+            np.testing.assert_array_equal(ra["u"], r1["u"])
+            np.testing.assert_array_equal(ra["triggered"], r1["triggered"])
+            assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
+            rep = ra["comms"]
+            assert rep["bytes_sent"] == r1["comms"]["bytes_sent"]
+            assert rep["bytes_sent"] <= rep["bytes_baseline"]
+            per = rep["per_stream"]
+            assert (per["bytes_sent"] <= per["bytes_baseline"]).all()
+            assert rep["async"]["requests"] > 0
+            assert rep["async"]["inflight_now"] == 0
+            np.testing.assert_array_equal(a.server_pos, sync.server_pos)
+            for x, y in zip(jax.tree.leaves(a.server.cache),
+                            jax.tree.leaves(sync.server.cache)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_staleness_bound_is_enforced(self):
+        """No reply merges later than max_staleness steps after its
+        trigger, and in pipelined mode none merges in-step (ages 1..k)."""
+        cfg, params, stream = self._setup(batch=2, length=12)
+        for k in (1, 3):
+            a = CollaborativeEngine(params, cfg, batch=2, max_len=16)
+            ages = []
+            orig = a.comms.record_merge
+            a.comms.record_merge = lambda m, age: (ages.append(age),
+                                                   orig(m, age))
+            a.run_async(stream, transport="inproc", max_staleness=k)
+            assert ages, "must have merged something"
+            assert all(1 <= g <= k for g in ages)
+
+    def test_no_trigger_means_no_async_traffic(self):
+        cfg, params, stream = self._setup(threshold=1e9)
+        B = stream.shape[0]
+        a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
+        ra = a.run_async(stream, transport="stream", max_staleness=4)
+        assert ra["triggered"].sum() == 0
+        assert ra["comms"]["bytes_sent"] == 0
+        assert "async" not in ra["comms"], "no requests -> no async section"
+        assert a.server.pos == 0, "server cache must stay cold"
+        np.testing.assert_allclose(ra["fhat"], ra["u"])

@@ -1,0 +1,76 @@
+"""Execute every fenced ``python`` code block in README.md and docs/*.md.
+
+Documentation snippets rot silently; this is the CI docs job (and a tier-1
+test via tests/test_docs.py).  Rules:
+
+* blocks fenced as ```python run headlessly, each in a fresh namespace,
+  with src/ on sys.path (so snippets read exactly as a user would run
+  them after ``pip install -e .``);
+* blocks fenced as ```python no-run are syntax-checked only (for
+  illustrative fragments that need external state);
+* any other fence language (```bash, ```text, ...) is ignored.
+
+Usage:  python tools/check_docs.py [file.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```python([^\n]*)\n(.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def doc_files() -> list:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def iter_blocks(path: Path):
+    text = path.read_text()
+    for m in FENCE.finditer(text):
+        info, code = m.group(1).strip(), m.group(2)
+        line = text[:m.start()].count("\n") + 2  # first line of the code
+        yield line, info, code
+
+
+def check_file(path: Path) -> list:
+    failures = []
+    for line, info, code in iter_blocks(path):
+        where = f"{path.relative_to(ROOT)}:{line}"
+        t0 = time.time()
+        try:
+            if "no-run" in info:
+                compile(code, where, "exec")
+                verdict = "SYNTAX-OK"
+            else:
+                exec(compile(code, where, "exec"), {"__name__": "__docs__"})
+                verdict = "OK"
+        except Exception as e:  # noqa: BLE001 — report and keep going
+            failures.append((where, e))
+            print(f"FAIL      {where}  {type(e).__name__}: {e}", flush=True)
+            continue
+        print(f"{verdict:9s} {where}  ({time.time() - t0:.1f}s)", flush=True)
+    return failures
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    paths = ([Path(a).resolve() for a in argv] if argv else doc_files())
+    failures, n_files = [], 0
+    for p in paths:
+        if not p.exists():
+            print(f"missing doc file: {p}", flush=True)
+            failures.append((str(p), FileNotFoundError(p)))
+            continue
+        n_files += 1
+        failures += check_file(p)
+    print(f"\n{n_files} doc files checked; {len(failures)} failing blocks",
+          flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
