@@ -1,8 +1,10 @@
 """Collaborative serving bench: the batched lax.scan fast path vs the
 per-token Python loop (the seed's only mode), the ASYNC pipelined engine
-vs the synchronous engine under a simulated server round trip, the
-edge-vs-server step costs, and the per-stream comms reduction the trigger
-buys (paper Fig 4).
+vs the synchronous engine under a simulated server round trip, the WIRE
+transport (a real correction-server subprocess over a Unix socket, RTT
+and bytes measured, per-request vs coalesced replay), the edge-vs-server
+step costs, and the per-stream comms reduction the trigger buys (paper
+Fig 4).
 
 Workloads:
   * paper_synthetic (batch 8) — the LM analogue of the paper's synthetic
@@ -15,12 +17,27 @@ Workloads:
     engine hides the RTT behind edge decode (target: >= 1.5x tokens/sec,
     measured end-to-end including the pipeline-tail drain).  The sync run
     is also cross-checked against ``run_scan`` (u/trigger bit-identical).
+  * paper_synthetic wire (batch 64, rate 0.3) — TWO processes: a
+    ``launch/server.py`` subprocess on a UDS, the engine driving it over
+    the ``wire`` transport.  The per-request arm (coalescing off) pays
+    one dense masked replay per queued request — the compute-bound floor
+    the b64 async bench exposes; the coalesced arm merges the queue into
+    one replay per server tick (union of masks, min of positions).
+    Latency here is MEASURED on the socket (rtt_mean_ms column), not
+    simulated.  Run standalone with ``python benchmarks/bench_serving.py
+    --transport wire``.
   * granite-8b smoke — LM-scale sanity rows (compute-dominated on CPU).
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import tempfile
 import time
 from typing import List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +47,8 @@ from repro.configs import registry
 from repro.configs.paper_synthetic import (SERVING as PAPER_SERVING,
                                            SERVING_LATENCY_S,
                                            SERVING_MAX_STALENESS,
-                                           SERVING_TRIGGER_RATE)
+                                           SERVING_TRIGGER_RATE,
+                                           SERVING_WIRE_SLOTS)
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
 from repro.serving.collaborative import CollaborativeEngine
@@ -143,6 +161,91 @@ def _bench_async(name: str, cfg, batch: int, steps: int, csv: List[str], *,
                f"inflight_peak={rep_a['inflight_peak']}")
 
 
+def _bench_wire(name: str, cfg, batch: int, steps: int, csv: List[str], *,
+                rate: float = 0.3,
+                staleness: int = SERVING_MAX_STALENESS) -> None:
+    """Real-boundary bench: per-request replay vs coalesced replay on the
+    SAME correction-server subprocess over a Unix socket; appends two csv
+    rows with MEASURED RTT and wire byte counts."""
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
+    cfg = _calibrate(cfg, params, stream, batch, max_len, rate)
+    warm = 6  # also absorbs the server-side catch-up jit (first requests)
+
+    from repro.launch.server import spawn_subprocess
+    tmp = tempfile.mkdtemp(prefix="bench_wire_")
+    uds = os.path.join(tmp, "corr.sock")
+    proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
+                            slots=max(batch, SERVING_WIRE_SLOTS),
+                            max_len=max_len,
+                            ready_file=os.path.join(tmp, "ready"),
+                            extra_args=("--idle-exit-s", "60"))
+    try:
+        def timed(coalesce: bool):
+            eng = CollaborativeEngine(params, cfg, batch=batch,
+                                      max_len=max_len)
+            eng.start_async(transport="wire", address=uds,
+                            max_staleness=staleness, wire_coalesce=coalesce)
+            outs = []
+            for t in range(warm):
+                outs.append(eng.step_async(jnp.asarray(stream[:, t])))
+            t0 = time.time()
+            for t in range(warm, steps):
+                outs.append(eng.step_async(jnp.asarray(stream[:, t])))
+            eng.finish_async()  # both arms pay the pipeline-tail drain
+            dt = time.time() - t0
+            res = {k: np.stack([o[k] for o in outs], 1)
+                   for k in ("u", "triggered")}
+            return eng, res, batch * (steps - warm) / dt
+
+        perreq_eng, perreq_res, tps_perreq = timed(False)
+        coal_eng, coal_res, tps_coal = timed(True)
+
+        # the measured boundary must not change the protocol: u and the
+        # trigger trace are bit-identical to the offline scan
+        scan = CollaborativeEngine(params, cfg, batch=batch,
+                                   max_len=max_len).run_scan(stream)
+        for res in (perreq_res, coal_res):
+            assert np.array_equal(res["u"], scan["u"])
+            assert np.array_equal(res["triggered"], scan["triggered"])
+
+        trig = float(coal_res["triggered"].mean())
+        for label, eng, tps in (("perreq", perreq_eng, tps_perreq),
+                                ("coalesced", coal_eng, tps_coal)):
+            rep = eng.comms.report()
+            w, a = rep["wire"], rep["async"]
+            assert rep["bytes_sent"] <= rep["bytes_baseline"]
+            extra = ("" if label == "perreq" else
+                     f"speedup_vs_perreq={tps / tps_perreq:.2f}x;")
+            csv.append(
+                f"serving/{name}_wire_{label},"
+                f"{1e6 / max(tps, 1e-9) * batch:.1f},"
+                f"tokens_per_sec={tps:.0f};transport=wire;"
+                f"coalesce={int(label == 'coalesced')};{extra}"
+                f"trigger_rate={trig:.3f};"
+                f"rtt_mean_ms={w['rtt_mean_s'] * 1e3:.2f};"
+                f"rtt_max_ms={w['rtt_max_s'] * 1e3:.2f};"
+                f"wire_tx_kb={w['tx_bytes'] / 1e3:.1f};"
+                f"wire_rx_kb={w['rx_bytes'] / 1e3:.1f};"
+                f"stall_s={a['stall_s']:.2f}")
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+def run_wire(csv: List[str]) -> None:
+    """The wire-transport rows only (the acceptance operating point)."""
+    n0 = len(csv)
+    _bench_wire("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+                csv=csv, rate=0.3)
+    for row in csv[n0:]:
+        print(row, flush=True)
+
+
 def run(csv: List[str]) -> None:
     n0 = len(csv)
     # paper-synthetic scale, batch 8: the scan fast path's headline number
@@ -157,6 +260,12 @@ def run(csv: List[str]) -> None:
                  csv=csv)
     _bench_async("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
                  csv=csv, rate=0.3)
+
+    # the REAL boundary: correction-server subprocess over a Unix socket,
+    # measured RTT/bytes, per-request vs coalesced replay (ROADMAP:
+    # real transport + worker-side request coalescing)
+    _bench_wire("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+                csv=csv, rate=0.3)
 
     # LM smoke scale
     cfg = registry.get_smoke("granite-8b")
@@ -178,5 +287,20 @@ def run(csv: List[str]) -> None:
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transport", choices=("all", "wire"), default="all",
+                    help="'wire' runs only the two-process socket bench "
+                         "and appends its rows to results/bench.csv")
+    args = ap.parse_args()
     rows: List[str] = []
-    run(rows)
+    if args.transport == "wire":
+        run_wire(rows)
+        out = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench.csv")
+        with open(out, "a") as fh:
+            fh.write("\n".join(rows) + "\n")
+        print(f"appended {len(rows)} rows to {out}")
+    else:
+        run(rows)

@@ -12,12 +12,22 @@ monitor/trigger path is bit-identical, corrections merge one step late) —
 printing per-stream alarm traces, the per-stream communication report,
 the offline-evaluation speedup, and the async overlap accounting.
 
+With ``--wire`` the demo goes end-to-end across a REAL process boundary:
+it checkpoints the trained params, spawns a correction-server subprocess
+(``launch/server.py --ckpt-dir ...``) on a Unix socket, and serves the
+same streams over the ``wire`` transport — the printed RTT and byte
+counts are measured on the socket, not simulated (docs/transport.md).
+
 Run:  PYTHONPATH=src python examples/serve_collaborative.py --arch granite-8b
+      PYTHONPATH=src python examples/serve_collaborative.py \
+          --arch granite-8b --wire
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
+import subprocess
+import tempfile
 import time
 
 import jax
@@ -40,6 +50,9 @@ def main() -> None:
                     help="simulated server round trip for the async demo")
     ap.add_argument("--max-staleness", type=int, default=8,
                     help="async merge window in edge steps (0 = strict sync)")
+    ap.add_argument("--wire", action="store_true",
+                    help="also serve across a real correction-server "
+                         "subprocess over a Unix socket (measured RTT)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke(args.arch)
@@ -108,6 +121,46 @@ def main() -> None:
               f"edge stall {rep_a['stall_s'] * 1e3:.0f} ms total")
     print("  safety under staleness (fhat <= u):",
           bool(np.all(res_async["fhat"] <= res_async["u"] + 1e-6)))
+
+    if not args.wire:
+        return
+
+    # the real boundary: checkpoint the trained params, hand them to a
+    # correction-server SUBPROCESS, and serve the same streams over the
+    # wire transport — both processes restore the same checkpoint, so
+    # only protocol bytes (backlog tokens + scores) cross the socket
+    from repro.launch.server import spawn_subprocess
+    from repro.training import checkpoint as ckpt
+    tmp = tempfile.mkdtemp(prefix="serve_wire_")
+    ckpt_dir = os.path.join(tmp, "ckpt")
+    ckpt.save(ckpt_dir, args.train_steps, params)
+    uds = os.path.join(tmp, "corr.sock")
+    proc = spawn_subprocess(args.arch, uds=uds, slots=args.streams,
+                            max_len=args.length + 8, ckpt_dir=ckpt_dir,
+                            ready_file=os.path.join(tmp, "ready"),
+                            quiet=False)
+    try:
+        weng = CollaborativeEngine(params, cfg, batch=args.streams,
+                                   max_len=args.length + 8)
+        res_wire = weng.run_async(stream, transport="wire", address=uds,
+                                  max_staleness=args.max_staleness)
+        print(f"\nwire transport (two processes, UDS): "
+              f"u identical: {np.array_equal(res_wire['u'], res['u'])}, "
+              f"triggers identical: "
+              f"{np.array_equal(res_wire['triggered'], res['triggered'])}")
+        w = res_wire["comms"].get("wire", {})
+        if w:
+            print(f"  measured on the socket: {w['tx_bytes']:,}B tx / "
+                  f"{w['rx_bytes']:,}B rx, RTT mean "
+                  f"{w['rtt_mean_s'] * 1e3:.2f} ms / max "
+                  f"{w['rtt_max_s'] * 1e3:.2f} ms "
+                  f"over {w['replies']} replies")
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
 
 
 if __name__ == "__main__":

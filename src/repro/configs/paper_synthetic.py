@@ -54,3 +54,7 @@ SERVING = ArchConfig(
 SERVING_TRIGGER_RATE = 0.15   # paper Fig 4: trigger rates ~0.05-0.3
 SERVING_LATENCY_S = 0.05      # mock-remote RTT (cellular-class uplink)
 SERVING_MAX_STALENESS = 16    # merge window: RTT / edge-step-time, rounded up
+# wire-transport operating point (bench_serving --transport wire and the
+# two-process demos): super-batch rows the correction server leases to
+# client sessions — the multi-tenant capacity of one server process
+SERVING_WIRE_SLOTS = 64

@@ -132,6 +132,12 @@ class CommsMeter:
     stall_s: float = 0.0       # edge-loop time blocked on overdue replies
     server_busy_s: float = 0.0  # worker compute time
     request_wall_s: float = 0.0  # dispatch -> reply-visible (incl. latency)
+    # -- wire transport (filled by SocketWorker): MEASURED, not modelled ----
+    wire_tx_bytes: int = 0     # bytes actually written to the socket
+    wire_rx_bytes: int = 0     # bytes actually read off the socket
+    wire_rtt_s: float = 0.0    # sum of measured dispatch->reply round trips
+    wire_rtt_max_s: float = 0.0
+    wire_replies: int = 0
 
     def __post_init__(self) -> None:
         if self.tokens_sent is None:
@@ -142,6 +148,7 @@ class CommsMeter:
             self.requests_inflight = np.zeros(self.n_streams, np.int64)
         self._per_stream_used = False
         self._async_used = False
+        self._wire_used = False
         self._inflight_reqs = 0
 
     def update(self, n_triggered: int, n_total: int) -> None:
@@ -195,6 +202,25 @@ class CommsMeter:
         self.server_busy_s += float(compute_s)
         self.request_wall_s += float(wall_s)
 
+    # -- wire transport (measured bytes/latency; serving/wire.py) -----------
+    def record_wire_tx(self, nbytes: int) -> None:
+        """``nbytes`` actually handed to the kernel (frames incl. headers
+        and handshake) — the measured counterpart of ``bytes_sent``."""
+        self._wire_used = True
+        self.wire_tx_bytes += int(nbytes)
+
+    def record_wire_rx(self, nbytes: int) -> None:
+        self._wire_used = True
+        self.wire_rx_bytes += int(nbytes)
+
+    def record_wire_rtt(self, dt: float) -> None:
+        """One measured dispatch->reply round trip over the real socket
+        (serialization + kernel + server replay + deserialization)."""
+        self._wire_used = True
+        self.wire_replies += 1
+        self.wire_rtt_s += float(dt)
+        self.wire_rtt_max_s = max(self.wire_rtt_max_s, float(dt))
+
     @property
     def overlap_ratio(self) -> float:
         """Fraction of request wall time (server compute + network) hidden
@@ -247,5 +273,13 @@ class CommsMeter:
                 "server_busy_s": self.server_busy_s,
                 "request_wall_s": self.request_wall_s,
                 "overlap_ratio": self.overlap_ratio,
+            }
+        if self._wire_used:        # only when the wire transport ran
+            rep["wire"] = {
+                "tx_bytes": self.wire_tx_bytes,
+                "rx_bytes": self.wire_rx_bytes,
+                "replies": self.wire_replies,
+                "rtt_mean_s": self.wire_rtt_s / max(self.wire_replies, 1),
+                "rtt_max_s": self.wire_rtt_max_s,
             }
         return rep

@@ -40,7 +40,16 @@ def run_collab(args, cfg, params) -> None:
     stream = next(tok.lm_batches(5, cfg, B, S))["tokens"]
     eng = CollaborativeEngine(params, cfg, batch=B, max_len=S + 8)
     t0 = time.time()
-    if args.mode == "async":
+    if args.transport == "wire":
+        if not args.address:
+            raise SystemExit("--transport wire needs --address "
+                             "(start: python -m repro.launch.server)")
+        # the real boundary works in sync mode too (max_staleness=0):
+        # every trigger pays the measured round trip
+        staleness = args.max_staleness if args.mode == "async" else 0
+        res = eng.run_async(stream, transport="wire", address=args.address,
+                            max_staleness=staleness)
+    elif args.mode == "async":
         latency_s = (None if args.latency_ms is None
                      else args.latency_ms * 1e-3)
         res = eng.run_async(stream, transport=args.transport,
@@ -62,6 +71,12 @@ def run_collab(args, cfg, params) -> None:
         print(f"async: {a['requests']} requests, {a['merged_late']} merged "
               f"late, overlap {a['overlap_ratio']:.2f}, "
               f"stall {a['stall_s'] * 1e3:.0f} ms")
+    if "wire" in rep:
+        w = rep["wire"]
+        print(f"wire (measured): {w['tx_bytes']:,}B tx / "
+              f"{w['rx_bytes']:,}B rx, RTT mean "
+              f"{w['rtt_mean_s'] * 1e3:.2f} ms / max "
+              f"{w['rtt_max_s'] * 1e3:.2f} ms over {w['replies']} replies")
 
 
 def main() -> None:
@@ -74,7 +89,11 @@ def main() -> None:
     ap.add_argument("--engine", choices=("step", "collab"), default="step")
     ap.add_argument("--mode", choices=("sync", "async"), default="sync")
     ap.add_argument("--transport", default="stream",
-                    choices=("inproc", "stream", "thread", "mock_remote"))
+                    choices=("inproc", "stream", "thread", "mock_remote",
+                             "wire"))
+    ap.add_argument("--address", default=None,
+                    help="wire transport: correction server UDS path or "
+                         "host:port (python -m repro.launch.server)")
     ap.add_argument("--max-staleness", type=int, default=8)
     ap.add_argument("--latency-ms", type=float, default=None,
                     help="simulated RTT; default keeps the transport's own")

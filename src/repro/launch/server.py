@@ -1,0 +1,146 @@
+"""Correction-server launcher: run the server half of the collaborative
+protocol as its own process (``serving/server.py``), listening on a
+Unix-domain or TCP socket for ``wire``-transport edge engines.
+
+Client and server must agree on the model: both sides build the SAME
+config and deterministic PRNGKey(0) init (or both restore the same
+checkpoint via ``--ckpt-dir``) — parameters never cross the wire, only
+protocol bytes (backlog tokens, scores) do.
+
+Run:  PYTHONPATH=src python -m repro.launch.server --arch granite-8b \
+          --uds /tmp/corr.sock --slots 16 --max-len 72
+      PYTHONPATH=src python -m repro.launch.server \
+          --arch paper-synthetic-serving --port 7431 --slots 128
+
+then point clients at it:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \
+          --engine collab --mode async --transport wire \
+          --address /tmp/corr.sock
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+import threading
+import time
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs import registry
+from repro.core import decomposition as deco
+from repro.training import checkpoint as ckpt
+
+
+def resolve_config(name: str, smoke: bool = True):
+    """Registry archs plus the paper-synthetic SERVING preset (the
+    bench_serving workload, which lives outside the registry)."""
+    if name == "paper-synthetic-serving":
+        from repro.configs.paper_synthetic import SERVING
+        return SERVING
+    return registry.get_smoke(name) if smoke else registry.get_full(name)
+
+
+def config_names():
+    return registry.names() + ["paper-synthetic-serving"]
+
+
+def spawn_subprocess(arch: str, *, uds: str, slots: int, max_len: int,
+                     ready_file: str, ckpt_dir: Optional[str] = None,
+                     extra_args: Tuple[str, ...] = (), quiet: bool = True,
+                     timeout_s: float = 180.0) -> "subprocess.Popen":
+    """Start ``python -m repro.launch.server`` as a subprocess and block
+    until it is listening (the ready file appears) or ``timeout_s``
+    elapses.  Shared by the bench, the example demo, and tests so the
+    spawn/ready/teardown dance exists once."""
+    import subprocess
+
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.launch.server", "--arch", arch,
+           "--uds", uds, "--slots", str(slots), "--max-len", str(max_len),
+           "--ready-file", ready_file]
+    if ckpt_dir:
+        cmd += ["--ckpt-dir", ckpt_dir]
+    cmd += list(extra_args)
+    pipe = subprocess.PIPE if quiet else None
+    proc = subprocess.Popen(cmd, env=env, stdout=pipe, stderr=pipe,
+                            text=quiet or None)
+    deadline = time.monotonic() + timeout_s
+    while not os.path.exists(ready_file):
+        if proc.poll() is not None:
+            err = proc.stderr.read()[-2000:] if quiet else ""
+            raise RuntimeError(f"correction server died: {err}")
+        if time.monotonic() > deadline:
+            proc.terminate()
+            raise RuntimeError("correction server startup timed out")
+        time.sleep(0.05)
+    return proc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", required=True, choices=config_names())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--uds", default=None, help="Unix-domain socket path")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=None,
+                    help="TCP port (0 = ephemeral); default is UDS")
+    ap.add_argument("--slots", type=int, default=16,
+                    help="super-batch rows leased to client sessions")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable request coalescing server-wide "
+                         "(per-request replays; the bench baseline)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ready-file", default=None,
+                    help="touch this path once listening (subprocess sync)")
+    ap.add_argument("--idle-exit-s", type=float, default=None,
+                    help="exit after all sessions have been gone this long")
+    args = ap.parse_args(argv)
+
+    if (args.uds is None) == (args.port is None):
+        ap.error("exactly one of --uds / --port is required")
+
+    cfg = resolve_config(args.arch, args.smoke)
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        _, params, _ = ckpt.load(args.ckpt_dir, params)
+        print(f"restored {args.ckpt_dir}", flush=True)
+
+    from repro.serving.server import CorrectionServer
+    srv = CorrectionServer(cfg, params, slots=args.slots,
+                           max_len=args.max_len, uds=args.uds,
+                           host=args.host,
+                           port=args.port if args.port is not None else 0,
+                           coalesce=not args.no_coalesce)
+    print(f"correction server: arch={args.arch} slots={args.slots} "
+          f"max_len={args.max_len} coalesce={not args.no_coalesce} "
+          f"listening on {srv.address}", flush=True)
+    if args.ready_file:
+        with open(args.ready_file, "w") as fh:
+            fh.write(srv.address + "\n")
+
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, lambda *_: stop.set())
+        except ValueError:
+            pass  # not the main thread
+    try:
+        srv.serve_forever(stop=stop, idle_exit_s=args.idle_exit_s)
+    finally:
+        st = srv.stats
+        print(f"served {st['sessions']} sessions, {st['requests']} requests "
+              f"in {st['replays']} replays ({st['coalesced']} coalesced), "
+              f"rx {st['bytes_rx']:,}B tx {st['bytes_tx']:,}B", flush=True)
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,4 @@
-from repro.serving import async_rpc, collaborative, engine  # noqa: F401
+from repro.serving import async_rpc, collaborative, engine, wire  # noqa: F401
+
+# repro.serving.server is imported lazily (it builds jitted engines at
+# construction; import it explicitly to run a correction server)

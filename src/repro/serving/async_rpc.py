@@ -37,6 +37,16 @@ behind edge decode.  This module provides the two halves of that overlap:
         a reply becomes visible ``latency_s`` after its compute finishes.
         Latency is modelled as a concurrent wire delay (replies overlap in
         flight); compute stays serialized like a real single server.
+      - ``wire``        — the REAL boundary: a ``SocketWorker`` speaking
+        the versioned binary protocol of ``serving/wire.py`` to a
+        standalone correction-server process (``serving/server.py``,
+        started via ``python -m repro.launch.server``) over a
+        Unix-domain or TCP socket.  The server owns the cache; only
+        backlog tokens + scores cross the wire; RTT and bytes are
+        MEASURED (``CommsMeter.record_wire_*``), not modelled, and the
+        server coalesces queued requests across clients and pipeline
+        depth.  ``latency_s`` is rejected here — the wire has whatever
+        latency it actually has.
 
   * ``Dispatcher`` — the edge-side bookkeeping: tracks in-flight requests,
     polls/blocks for replies, and enforces the staleness window.
@@ -60,17 +70,18 @@ trivial.  See ``docs/protocol.md`` for the full timeline diagrams.
 from __future__ import annotations
 
 import queue
+import socket
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-TRANSPORTS = ("inproc", "stream", "thread", "mock_remote")
+TRANSPORTS = ("inproc", "stream", "thread", "mock_remote", "wire")
 
 
 @dataclass
@@ -117,6 +128,7 @@ class ServerWorker:
         self._params = params
         self.cache = cache
         self._ready: deque = deque()  # replies visible to poll(), FIFO
+        self._closed = False
 
     # -- server side ---------------------------------------------------------
     def _compute(self, req: CatchupRequest) -> CatchupReply:
@@ -157,7 +169,10 @@ class ServerWorker:
         return taken
 
     def close(self) -> None:
-        pass
+        """Idempotent on every transport: safe to call twice, and again
+        after ``CollaborativeEngine.finish_async`` (which closes the
+        worker itself)."""
+        self._closed = True
 
 
 class StreamWorker(ServerWorker):
@@ -240,6 +255,9 @@ class StreamWorker(ServerWorker):
         return out
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         jax.block_until_ready(self.cache)
 
 
@@ -304,6 +322,9 @@ class ThreadWorker(ServerWorker):
         return out
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         if self._thread.is_alive():
             self._q.put(None)
             self._thread.join()
@@ -318,22 +339,190 @@ class MockRemoteWorker(ThreadWorker):
         super().__init__(catchup_fn, params, cache, latency_s=latency_s)
 
 
+class SocketWorker(ServerWorker):
+    """The ``wire`` transport: catch-up requests cross a REAL socket to a
+    standalone correction-server process (``serving/server.py``).
+
+    The server owns the authoritative server cache (leased super-batch
+    rows) and the replayed token history for the whole session; locally,
+    ``self.cache`` keeps the engine's initial (cold) cache — with a real
+    boundary there is nothing to re-adopt at ``finish_async``, the
+    protocol state that comes home is ``server_pos`` (carried by every
+    reply).  Only the protocol bytes move: each dispatch serializes the
+    trigger mask, per-stream catch-up bases, dispatch-time u scores and
+    the BACKLOG token slices (never the full history snapshot); each
+    reply carries (v, fhat) and the server's replay time.  Wire latency
+    is whatever the kernel + scheduler + server actually take — the
+    worker measures it per request (``CommsMeter.record_wire_rtt``) along
+    with exact tx/rx byte counts, including the handshake.
+
+    ``coalesce=False`` opts the session out of server-side request
+    coalescing (per-request replays — the bench baseline).
+    """
+
+    kind = "wire"
+
+    def __init__(self, cache, *, address: str, batch: int, max_len: int,
+                 tok_tail: Tuple[int, ...] = (), coalesce: bool = True,
+                 comms=None, connect_timeout: float = 60.0,
+                 client: str = "edge"):
+        from repro.serving import wire  # local import: keep module light
+
+        self._wire = wire
+        self._fn = None          # the server process owns catchup + params
+        self._params = None
+        self.cache = cache       # stays cold locally (see class docstring)
+        self._closed = False
+        self._comms = comms
+        self._reader = wire.FrameReader()
+        self._replies: deque = deque()
+        self._dispatch_wall: Dict[int, float] = {}
+        self._sock = wire.connect(address, timeout=connect_timeout)
+        try:
+            hello = wire.encode_hello(wire.Hello(
+                batch, max_len, tuple(tok_tail), coalesce, client))
+            self._sock.sendall(hello)
+            self._tx(len(hello))
+            ack = self._handshake()
+        except BaseException:
+            self._sock.close()  # a refused handshake must not leak the fd
+            raise
+        self.session_id = ack.session_id
+        self.slot_lo = ack.slot_lo
+
+    # -- metering ------------------------------------------------------------
+    def _tx(self, n: int) -> None:
+        if self._comms is not None:
+            self._comms.record_wire_tx(n)
+
+    def _rx(self, n: int) -> None:
+        if self._comms is not None:
+            self._comms.record_wire_rx(n)
+
+    # -- socket pump ---------------------------------------------------------
+    def _handshake(self):
+        wire = self._wire
+        self._sock.settimeout(None)
+        while True:
+            data = self._sock.recv(1 << 16)
+            if not data:
+                raise wire.WireError("server closed during handshake")
+            self._rx(len(data))
+            for p in self._reader.feed(data):
+                msg = wire.decode(p)
+                if isinstance(msg, wire.Error):
+                    raise wire.WireError(f"server: {msg.message}")
+                if isinstance(msg, wire.HelloAck):
+                    return msg
+                raise wire.WireError(f"unexpected handshake reply {msg}")
+
+    def _to_reply(self, msg) -> CatchupReply:
+        now = time.monotonic()
+        disp = self._dispatch_wall.pop(msg.req_id, now)
+        if self._comms is not None:
+            self._comms.record_wire_rtt(now - disp)
+        return CatchupReply(msg.req_id, msg.t, np.asarray(msg.triggered),
+                            np.asarray(msg.v), np.asarray(msg.fhat),
+                            msg.server_time_s, wall_ready=now)
+
+    def _pump(self, block: bool) -> None:
+        """Drain the socket into ``self._replies``.  Non-blocking drains
+        whatever the kernel has; blocking returns once >= 1 reply landed."""
+        wire = self._wire
+        got = False
+        while True:
+            self._sock.settimeout(None if (block and not got) else 0.0)
+            try:
+                data = self._sock.recv(1 << 16)
+            except (BlockingIOError, socket.timeout):
+                return
+            except InterruptedError:
+                continue
+            if not data:
+                raise wire.WireError("server closed connection")
+            self._rx(len(data))
+            for p in self._reader.feed(data):
+                msg = wire.decode(p)
+                if isinstance(msg, wire.Error):
+                    raise wire.WireError(f"server: {msg.message}")
+                if isinstance(msg, wire.WireReply):
+                    self._replies.append(self._to_reply(msg))
+                    got = True
+
+    # -- ServerWorker API ----------------------------------------------------
+    def dispatch(self, req: CatchupRequest) -> None:
+        buf = self._wire.encode_request(
+            req.req_id, int(req.t), req.triggered, req.server_pos,
+            np.asarray(req.u, np.float32), np.asarray(req.history))
+        self._dispatch_wall[req.req_id] = time.monotonic()
+        self._sock.settimeout(None)
+        self._sock.sendall(buf)
+        self._tx(len(buf))
+
+    def poll(self) -> List[CatchupReply]:
+        self._pump(block=False)
+        out = list(self._replies)
+        self._replies.clear()
+        return out
+
+    def wait(self, req_id: int) -> List[CatchupReply]:
+        out: List[CatchupReply] = []
+        while True:
+            while self._replies:
+                r = self._replies.popleft()
+                out.append(r)
+                if r.req_id == req_id:
+                    return out
+            self._pump(block=True)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.settimeout(1.0)
+            bye = self._wire.encode_bye()
+            self._sock.sendall(bye)
+            self._tx(len(bye))
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
 def make_worker(transport: str, catchup_fn, params, cache, *,
-                latency_s: Optional[float] = None) -> ServerWorker:
+                latency_s: Optional[float] = None,
+                wire_opts: Optional[Dict[str, Any]] = None) -> ServerWorker:
     """``latency_s=None`` keeps each transport's own default (0 for
-    stream/thread, 20 ms for mock_remote)."""
+    stream/thread, 20 ms for mock_remote).  ``wire_opts`` configures the
+    ``wire`` transport (at minimum ``address``; see ``SocketWorker``)."""
+    if transport not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {transport!r}: valid transports are "
+            + ", ".join(repr(t) for t in TRANSPORTS))
     if transport == "inproc":
         if latency_s:
             raise ValueError("inproc transport has no latency model")
         return ServerWorker(catchup_fn, params, cache)
+    if transport == "wire":
+        if latency_s:
+            raise ValueError(
+                "wire transport has no simulated latency: RTT is measured "
+                "on the real socket (drop latency_s)")
+        if not wire_opts or "address" not in wire_opts:
+            raise ValueError(
+                "wire transport needs wire_opts={'address': ...} pointing "
+                "at a running correction server (python -m "
+                "repro.launch.server)")
+        return SocketWorker(cache, **wire_opts)
     kw = {} if latency_s is None else {"latency_s": latency_s}
     if transport == "stream":
         return StreamWorker(catchup_fn, params, cache, **kw)
     if transport == "thread":
         return ThreadWorker(catchup_fn, params, cache, **kw)
-    if transport == "mock_remote":
-        return MockRemoteWorker(catchup_fn, params, cache, **kw)
-    raise ValueError(f"unknown transport {transport!r}; one of {TRANSPORTS}")
+    return MockRemoteWorker(catchup_fn, params, cache, **kw)
 
 
 class Dispatcher:
@@ -410,7 +599,12 @@ class Dispatcher:
     def drain(self) -> List[CatchupReply]:
         """Block for every outstanding reply (end of stream).  Tail replies
         have no edge step left to report into; the engine folds them into
-        protocol state (server_pos) only."""
+        protocol state (server_pos) only.
+
+        Re-entrant: once drained (or when nothing was ever dispatched) a
+        further ``drain`` touches no worker state and returns ``[]`` —
+        safe to call again after ``finish_async`` or on a closed worker.
+        """
         if self._inflight:
             t0 = time.monotonic()
             self._arrived(self.worker.wait(self._inflight[-1].req_id))

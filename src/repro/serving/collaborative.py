@@ -34,7 +34,10 @@ Three execution paths:
     hot loop.  Each trigger BLOCKS on the server catch-up.
   * ``step_async`` / ``run_async`` — the PIPELINED online path: a trigger
     dispatches the same masked catch-up to a ``ServerWorker`` (in-process,
-    worker-thread, or mock-remote transport — ``serving/async_rpc.py``)
+    worker-thread, mock-remote, or real-socket ``wire`` transport —
+    ``serving/async_rpc.py``; the wire transport talks to the standalone
+    correction-server process of ``serving/server.py``, which coalesces
+    queued requests across clients)
     and the edge loop keeps decoding; corrections merge one step late
     (``fhat`` picks up the corrector at t+1..t+max_staleness) while the
     monitor-only u/trigger path stays exact and never waits on the server.
@@ -171,9 +174,23 @@ class CollaborativeEngine:
         triggered = np.asarray(u > self.m.threshold - self.m.trigger_margin)
         return u, triggered
 
+    def _check_not_detached(self) -> None:
+        """After a ``wire`` session the engine's server-side state lived
+        in the remote correction server and was DISCARDED when the
+        session closed (the server frees and zeroes the lease at BYE).
+        The local server cache is cold while ``server_pos`` records the
+        remote progress, so continued serving on this engine would replay
+        partial backlogs into an empty cache — refuse loudly instead."""
+        if getattr(self, "_remote_detached", False):
+            raise RuntimeError(
+                "this engine's server state lived in a remote correction "
+                "server (wire transport) and was discarded when the "
+                "session closed; create a fresh engine to serve again")
+
     def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
         """One monitoring step over the batch.  Returns u, fhat, triggered."""
         t, B = self.t, self.batch
+        self._check_not_detached()
         u, triggered = self._monitor_prologue(tokens_t)
         fhat = np.asarray(u).copy()
         if triggered.any():
@@ -210,25 +227,44 @@ class CollaborativeEngine:
     def start_async(self, *, transport: str = "stream",
                     max_staleness: int = 1,
                     latency_s: Optional[float] = None,
+                    address: Optional[str] = None,
+                    wire_coalesce: bool = True,
                     worker=None) -> None:
         """Open an async serving session: hand the server cache to a
         ``ServerWorker`` and set up the dispatch/merge layer.
 
-        transport: "inproc" | "stream" | "thread" | "mock_remote"
-        (see async_rpc; "stream" overlaps via JAX async dispatch).
+        transport: "inproc" | "stream" | "thread" | "mock_remote" | "wire"
+        (see async_rpc; "stream" overlaps via JAX async dispatch; "wire"
+        talks to a standalone correction-server PROCESS over a socket —
+        the real boundary, RTT/bytes measured not simulated).
         max_staleness: merge window — 0 is the strict synchronous
         fallback (bit-identical to ``step``); k >= 1 lets a reply land
         1..k steps after its trigger, blocking the edge loop only at k.
         latency_s: simulated server round trip (stream/thread/mock_remote);
-        None keeps the transport's own default.
+        None keeps the transport's own default.  Rejected for "wire".
+        address: "wire" only — the server's UDS path or "host:port"
+        (start one with ``python -m repro.launch.server``).  With "wire"
+        the server process owns the session's server cache; the engine's
+        local server cache stays cold and only ``server_pos`` (carried by
+        replies) comes home.
+        wire_coalesce: "wire" only — opt this session out of server-side
+        request coalescing (per-request replays) when False.
         """
         from repro.serving import async_rpc
         if getattr(self, "_dispatcher", None) is not None:
             raise RuntimeError("async session already open")
+        self._check_not_detached()
         if worker is None:
+            wire_opts = None
+            if transport == "wire" and address is not None:
+                wire_opts = dict(address=address, batch=self.batch,
+                                 max_len=self.max_len,
+                                 tok_tail=tuple(self._history.shape[2:]),
+                                 coalesce=wire_coalesce, comms=self.comms)
             worker = async_rpc.make_worker(transport, self._catchup,
                                            self.params, self.server.cache,
-                                           latency_s=latency_s)
+                                           latency_s=latency_s,
+                                           wire_opts=wire_opts)
         self._worker = worker
         self._dispatcher = async_rpc.Dispatcher(
             worker, max_staleness=max_staleness, comms=self.comms)
@@ -286,19 +322,27 @@ class CollaborativeEngine:
             self.server_pos = np.where(r.triggered, r.t + 1, self.server_pos)
         self.server.cache = self._worker.cache
         self.server.pos = int(self.server_pos.max())
+        if getattr(self._worker, "kind", None) == "wire":
+            # the worker's cache is the engine's untouched cold cache (the
+            # real one lived — and died — in the server process): any
+            # further serving on this engine would be silently wrong
+            self._remote_detached = True
         self._worker.close()
         self._dispatcher = self._worker = None
 
     def run_async(self, token_stream: np.ndarray, *,
                   transport: str = "stream", max_staleness: int = 1,
-                  latency_s: Optional[float] = None, worker=None
-                  ) -> Dict[str, np.ndarray]:
+                  latency_s: Optional[float] = None,
+                  address: Optional[str] = None, wire_coalesce: bool = True,
+                  worker=None) -> Dict[str, np.ndarray]:
         """Pipelined online protocol over a full stream: (B, S[,K]) ->
         stacked traces + comms report (including the async overlap
-        accounting).  ``max_staleness=0`` reproduces ``run`` bit-for-bit;
+        accounting, and measured wire bytes/RTT for the "wire"
+        transport).  ``max_staleness=0`` reproduces ``run`` bit-for-bit;
         u and the trigger trace are staleness-independent."""
         self.start_async(transport=transport, max_staleness=max_staleness,
-                         latency_s=latency_s, worker=worker)
+                         latency_s=latency_s, address=address,
+                         wire_coalesce=wire_coalesce, worker=worker)
         try:
             S = token_stream.shape[1]
             us, fhats, trigs = [], [], []

@@ -1,0 +1,444 @@
+"""Standalone correction server: the server half of the paper's
+``f = u + v`` decomposition as its own PROCESS, behind a real socket.
+
+``serving/async_rpc.py``'s in-process transports simulate the network
+round trip; this module is the measured counterpart.  One
+``CorrectionServer`` owns a **super-batch** of cache rows (``slots``) and
+leases contiguous row ranges to edge-client *sessions*: each connected
+``CollaborativeEngine`` (the ``wire`` transport / ``SocketWorker``) gets
+``batch`` rows of the shared server KV/SSM cache plus a matching region
+of the server-side token-history mirror.  All protocol state the paper
+assigns to the server — the per-stream catch-up cache and the replayed
+token history — therefore lives HERE, across a serialization boundary
+from the edge; the client's local server cache stays cold for the whole
+session.
+
+CROSS-CLIENT REQUEST COALESCING (the throughput mechanism):
+
+Queued catch-up requests — from many edge clients, and from the deep
+pipeline of a single async client — are merged into ONE masked replay per
+event-loop tick through the engine's existing jitted ``_catchup_impl``:
+
+  * ``triggered``  = union of the requests' trigger masks (slot-indexed);
+  * ``server_pos`` = per-slot MIN of the requests' catch-up bases;
+  * ``t``          = per-slot max trigger step (a (slots,) vector — the
+    masked replay already supports per-stream end positions, since its
+    round mask is ``server_pos + r <= t`` elementwise);
+  * ``u``          = per-slot dispatch-time score of the latest request.
+
+Because the replay is per-element masked (``engine.make_step_at``), rows
+belonging to different sessions never interact: client A's triggers
+cannot perturb client B's cache rows bit-wise (asserted in tests).  The
+merge is safe for the protocol because every reply's corrector satisfies
+``s*sigma(v) >= 0``: a coalesced reply can only carry a *fresher* v (the
+replay may have advanced a shared row past an older queued request's
+trigger step), and a fresher or staler corrector applied to the current
+``u`` still only lowers ``fhat`` — the monitor's upper-bound safety
+story is untouched (see docs/transport.md for the full argument).
+
+What coalescing buys: the async bench at batch 64 is compute-bound on
+per-request dense replay rounds (each queued request costs a full masked
+pass over the batch).  Merging k queued requests costs max-rounds once
+instead of sum-of-rounds — the per-request dispatch floor drops by ~k.
+
+Replies are FIFO per session (the Dispatcher's ordering contract): a
+session either coalesces (all its queued requests merge, replies emitted
+in arrival order) or opted out via HELLO (``coalesce=False`` — the
+bench's per-request baseline), in which case its requests replay one by
+one, still in arrival order.
+
+The event loop is a single-threaded ``selectors`` reactor: drain every
+readable socket, then run at most one coalesced replay, then flush
+writes.  JAX compute happens on the loop thread — the server is itself a
+batched inference engine, not a proxy.  Run it with
+``python -m repro.launch.server`` (see that module for the CLI) or embed
+it in a thread via ``serve_forever(stop=threading.Event())`` (tests).
+"""
+from __future__ import annotations
+
+import selectors
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import decomposition as deco
+from repro.serving import wire
+from repro.serving.collaborative import CollaborativeEngine
+from repro.serving.engine import cache_batch_axes
+
+
+@dataclass
+class Session:
+    """One connected edge client: a leased range of super-batch rows."""
+
+    sid: int
+    conn: socket.socket
+    lo: int = -1            # first super-batch row (−1 until HELLO)
+    batch: int = 0
+    max_len: int = 0
+    coalesce: bool = True
+    client: str = "?"
+    reader: wire.FrameReader = field(default_factory=wire.FrameReader)
+    out: bytearray = field(default_factory=bytearray)
+
+    @property
+    def hi(self) -> int:
+        return self.lo + self.batch
+
+
+class CorrectionServer:
+    """Socket front-end + coalescing replay core over one super-batch."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 16,
+                 max_len: int = 128, uds: Optional[str] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 coalesce: bool = True):
+        self.cfg, self.m = cfg, cfg.monitor
+        self.slots, self.max_len = int(slots), int(max_len)
+        self.coalesce = bool(coalesce)   # server-wide kill switch
+        # the replay core IS the engine's jitted masked catch-up: one
+        # CollaborativeEngine at batch=slots supplies the compiled
+        # _catchup_impl and the super-batch server cache.  (Its edge tower
+        # and comms meter are unused here — the edge lives in the clients.)
+        eng = CollaborativeEngine(params, cfg, batch=self.slots,
+                                  max_len=self.max_len)
+        self._eng = eng
+        self._cache = eng.server.cache
+        self._axes = cache_batch_axes(cfg, self.slots, self.max_len)
+        tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
+        self.tok_tail: Tuple[int, ...] = tok_tail
+        # server-side token-history mirror: requests carry only backlog
+        # slices; the replay needs them at absolute positions
+        self._history = np.zeros((self.slots, self.max_len) + tok_tail,
+                                 np.int32)
+        # per-reply fusion from the REQUEST's own trigger mask and u (the
+        # server's threshold is irrelevant: the client already decided)
+        s, sig = self.m.s, self.m.sigma
+        self._fuse = jax.jit(lambda u, v, trig: jnp.where(
+            trig, u - s * deco.sigma(v, sig), u))
+
+        # -- sessions / slots ------------------------------------------------
+        self._sessions: Dict[socket.socket, Session] = {}
+        self._free: List[Tuple[int, int]] = [(0, self.slots)]  # [lo, hi)
+        self._next_sid = 1
+        self._pending: List[Tuple[Session, wire.WireRequest]] = []
+        self.stats = {"requests": 0, "replays": 0, "coalesced": 0,
+                      "sessions": 0, "bytes_rx": 0, "bytes_tx": 0}
+
+        # -- listener ---------------------------------------------------------
+        self.uds = uds
+        if uds is not None:
+            self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._listener.bind(uds)
+            self.address = uds
+        else:
+            self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._listener.bind((host, port))
+            h, p = self._listener.getsockname()
+            self.address = f"{h}:{p}"
+        self._listener.listen(64)
+        self._listener.setblocking(False)
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._listener, selectors.EVENT_READ, "accept")
+        self._closed = False
+
+    # -- slot allocation -----------------------------------------------------
+    def _alloc(self, n: int) -> int:
+        for i, (lo, hi) in enumerate(self._free):
+            if hi - lo >= n:
+                self._free[i] = (lo + n, hi)
+                if self._free[i][0] == self._free[i][1]:
+                    del self._free[i]
+                return lo
+        return -1
+
+    def _release(self, lo: int, n: int) -> None:
+        self._free.append((lo, lo + n))
+        self._free.sort()
+        merged: List[Tuple[int, int]] = []
+        for a, b in self._free:
+            if merged and merged[-1][1] == a:
+                merged[-1] = (merged[-1][0], b)
+            else:
+                merged.append((a, b))
+        self._free = merged
+
+    def _reset_rows(self, lo: int, hi: int) -> None:
+        """Zero a leased range: a new session must see cold cache rows even
+        if a previous tenant used them."""
+        def z(a, ax):
+            idx = [slice(None)] * a.ndim
+            idx[ax] = slice(lo, hi)
+            return a.at[tuple(idx)].set(jnp.zeros((), a.dtype))
+        self._cache = jax.tree.map(z, self._cache, self._axes)
+        self._history[lo:hi] = 0
+
+    # -- socket plumbing -----------------------------------------------------
+    def _send(self, sess: Session, data: bytes) -> None:
+        sess.out.extend(data)
+        self._flush(sess)
+
+    def _flush(self, sess: Session) -> None:
+        while sess.out:
+            try:
+                n = sess.conn.send(sess.out)
+            except (BlockingIOError, InterruptedError):
+                break
+            except OSError:
+                self._drop(sess)
+                return
+            del sess.out[:n]
+            self.stats["bytes_tx"] += n
+        events = selectors.EVENT_READ | (selectors.EVENT_WRITE if sess.out
+                                         else 0)
+        try:
+            self._sel.modify(sess.conn, events, "conn")
+        except KeyError:
+            pass
+
+    def _drop(self, sess: Session) -> None:
+        try:
+            self._sel.unregister(sess.conn)
+        except (KeyError, ValueError):
+            pass
+        try:
+            sess.conn.close()
+        except OSError:
+            pass
+        if sess.lo >= 0:
+            self._release(sess.lo, sess.batch)
+        self._sessions.pop(sess.conn, None)
+        self._pending = [(s, r) for s, r in self._pending if s is not sess]
+
+    def _accept(self) -> None:
+        while True:
+            try:
+                conn, _ = self._listener.accept()
+            except (BlockingIOError, InterruptedError):
+                return
+            except OSError:
+                return
+            conn.setblocking(False)
+            if conn.family == socket.AF_INET:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sess = Session(self._next_sid, conn)
+            self._next_sid += 1
+            self._sessions[conn] = sess
+            self._sel.register(conn, selectors.EVENT_READ, "conn")
+
+    def _read(self, sess: Session) -> None:
+        while True:
+            try:
+                data = sess.conn.recv(1 << 16)
+            except (BlockingIOError, InterruptedError):
+                return
+            except OSError:
+                self._drop(sess)
+                return
+            if not data:
+                self._drop(sess)
+                return
+            self.stats["bytes_rx"] += len(data)
+            try:
+                payloads = sess.reader.feed(data)
+                for p in payloads:
+                    if sess.conn not in self._sessions:
+                        return  # dropped mid-batch (BYE/protocol error)
+                    self._handle(sess, wire.decode(p))
+            except wire.WireError as e:
+                try:
+                    self._send(sess, wire.encode_error(str(e)))
+                finally:
+                    self._drop(sess)
+                return
+
+    # -- protocol ------------------------------------------------------------
+    def _handle(self, sess: Session, msg: wire.Message) -> None:
+        if isinstance(msg, wire.Hello):
+            if sess.lo >= 0:
+                self._send(sess, wire.encode_error("duplicate HELLO"))
+                return
+            if msg.max_len > self.max_len:
+                self._send(sess, wire.encode_error(
+                    f"client max_len {msg.max_len} > server {self.max_len}"))
+                return
+            if msg.tok_tail != self.tok_tail:
+                self._send(sess, wire.encode_error(
+                    f"token tail {msg.tok_tail} != server {self.tok_tail}"))
+                return
+            lo = self._alloc(msg.batch)
+            if lo < 0:
+                self._send(sess, wire.encode_error(
+                    f"server full: {msg.batch} slots requested, "
+                    f"{sum(h - l for l, h in self._free)} free of {self.slots}"))
+                return
+            sess.lo, sess.batch = lo, msg.batch
+            sess.max_len = msg.max_len
+            sess.coalesce = bool(msg.coalesce) and self.coalesce
+            sess.client = msg.client
+            self._reset_rows(lo, lo + msg.batch)
+            self.stats["sessions"] += 1
+            self._send(sess, wire.encode_hello_ack(
+                wire.HelloAck(sess.sid, lo, self.max_len)))
+        elif isinstance(msg, wire.WireRequest):
+            if sess.lo < 0:
+                self._send(sess, wire.encode_error("request before HELLO"))
+                return
+            bad = self._validate_request(sess, msg)
+            if bad is not None:
+                # a geometry violation is a protocol breach: reject AND
+                # drop, so a buggy client can never reach rows outside
+                # its lease or crash the shared replay
+                self._send(sess, wire.encode_error(bad))
+                self._drop(sess)
+                return
+            self._pending.append((sess, msg))
+        elif isinstance(msg, wire.Bye):
+            self._flush(sess)
+            self._drop(sess)
+        elif isinstance(msg, wire.Error):
+            self._drop(sess)
+        # HelloAck / WireReply from a client are protocol violations;
+        # drop silently rather than crash the loop
+        else:
+            self._drop(sess)
+
+    def _validate_request(self, sess: Session,
+                          req: wire.WireRequest) -> Optional[str]:
+        """Geometry check against the session's lease — every index the
+        replay will touch must be inside it.  Returns an error string, or
+        None when the request is well-formed."""
+        B = sess.batch
+        if (req.triggered.shape != (B,) or req.server_pos.shape != (B,)
+                or req.u.shape != (B,)):
+            return (f"request vectors {req.triggered.shape}/"
+                    f"{req.server_pos.shape}/{req.u.shape} != session "
+                    f"batch ({B},)")
+        if not 0 <= req.t < sess.max_len:
+            return f"trigger step {req.t} outside [0, {sess.max_len})"
+        if req.triggered.any():
+            pos = req.server_pos[req.triggered]
+            if (pos < 0).any() or (pos > req.t).any():
+                return "server_pos outside [0, t] on a triggered stream"
+        want = (int(req.backlog_lengths().sum()),) + self.tok_tail
+        if req.tokens.shape != want:
+            return f"token payload shape {req.tokens.shape} != {want}"
+        return None
+
+    # -- the replay core -----------------------------------------------------
+    def _replay(self, group: List[Tuple[Session, wire.WireRequest]]) -> None:
+        """One masked catch-up over the union of the group's requests,
+        then one reply per request (arrival order)."""
+        S = self.slots
+        trig = np.zeros(S, bool)
+        pos = np.zeros(S, np.int32)
+        tvec = np.zeros(S, np.int32)
+        uvec = np.zeros(S, np.float32)
+        for sess, req in group:
+            lengths = req.backlog_lengths()
+            off = 0
+            for i in np.flatnonzero(req.triggered):
+                L = int(lengths[i])
+                gi = sess.lo + int(i)
+                p = int(req.server_pos[i])
+                self._history[gi, p:req.t + 1] = req.tokens[off:off + L]
+                off += L
+                if trig[gi]:
+                    pos[gi] = min(pos[gi], p)
+                else:
+                    pos[gi] = p
+                trig[gi] = True
+                if req.t >= tvec[gi]:
+                    tvec[gi] = req.t
+                    uvec[gi] = req.u[i]
+        t0 = time.monotonic()
+        cache, v, _ = self._eng._catchup(
+            self._eng.params, self._cache, jnp.asarray(self._history),
+            jnp.asarray(pos), jnp.asarray(tvec), jnp.asarray(trig),
+            jnp.asarray(uvec))
+        v = jax.block_until_ready(v)
+        self._cache = cache
+        dt = time.monotonic() - t0
+        v_np = np.asarray(v)
+        self.stats["replays"] += 1
+        self.stats["requests"] += len(group)
+        if len(group) > 1:
+            self.stats["coalesced"] += len(group) - 1
+        for sess, req in group:
+            vi = v_np[sess.lo:sess.hi]
+            fhat = np.asarray(self._fuse(jnp.asarray(req.u),
+                                         jnp.asarray(vi),
+                                         jnp.asarray(req.triggered)))
+            self._send(sess, wire.encode_reply(wire.WireReply(
+                req.req_id, req.t, req.triggered, vi, fhat,
+                server_time_s=dt / len(group), coalesced=len(group))))
+
+    def _process_pending(self) -> None:
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        group = [p for p in pending if p[0].coalesce]
+        if group:
+            self._replay(group)
+        for p in pending:
+            if not p[0].coalesce:
+                self._replay([p])
+
+    # -- loop ----------------------------------------------------------------
+    def serve_tick(self, timeout: float = 0.001) -> None:
+        for key, mask in self._sel.select(timeout):
+            if key.data == "accept":
+                self._accept()
+                continue
+            sess = self._sessions.get(key.fileobj)
+            if sess is None:
+                continue
+            if mask & selectors.EVENT_READ:
+                self._read(sess)
+            if mask & selectors.EVENT_WRITE and sess.conn in self._sessions:
+                self._flush(sess)
+        self._process_pending()
+
+    def serve_forever(self, *, poll_s: float = 0.001,
+                      stop: Optional[threading.Event] = None,
+                      idle_exit_s: Optional[float] = None) -> None:
+        """Run until ``stop`` is set (or forever).  ``idle_exit_s``: exit
+        once a session has existed and none remain for that long — test
+        and bench hygiene for subprocess servers."""
+        idle_since: Optional[float] = None
+        while stop is None or not stop.is_set():
+            self.serve_tick(poll_s)
+            if idle_exit_s is not None:
+                if self._sessions or self.stats["sessions"] == 0:
+                    idle_since = None
+                elif idle_since is None:
+                    idle_since = time.monotonic()
+                elif time.monotonic() - idle_since > idle_exit_s:
+                    return
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for sess in list(self._sessions.values()):
+            self._drop(sess)
+        try:
+            self._sel.unregister(self._listener)
+        except (KeyError, ValueError):
+            pass
+        self._listener.close()
+        self._sel.close()
+        if self.uds is not None:
+            import os
+            try:
+                os.unlink(self.uds)
+            except OSError:
+                pass

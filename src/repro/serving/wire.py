@@ -1,0 +1,362 @@
+"""Wire codec for the collaborative protocol: a versioned binary framing
+of ``CatchupRequest``/``CatchupReply`` plus the session-control messages
+(HELLO / HELLO_ACK / BYE / ERROR) that the standalone correction server
+(``serving/server.py``) and the ``wire`` transport
+(``async_rpc.SocketWorker``) exchange across a real serialization
+boundary.
+
+Design constraints (the reason this module exists, rather than pickle):
+
+* **No pickle.**  Frames are plain ``struct``-packed little-endian bytes
+  with explicitly-coded numpy arrays (dtype code + shape + raw C-order
+  buffer).  A hostile/buggy peer can produce a ``WireError``, never code
+  execution, and the byte layout is stable across Python versions.
+* **Length-prefixed frames.**  Every message travels as
+  ``[u32 length][payload]`` so a stream socket can be re-framed
+  incrementally (``FrameReader``) with no sentinels inside the payload.
+* **Backlogs, not histories.**  The in-process ``CatchupRequest`` carries
+  the full on-device token-history snapshot because jnp arrays make the
+  snapshot free.  On the wire only the protocol-relevant bytes move: each
+  triggered stream's backlog slice ``history[i, server_pos[i] : t+1]``,
+  concatenated.  That makes bytes-on-the-wire proportional to the tokens
+  the paper says must ship — the measured counterpart of the
+  ``CommsMeter`` token-level model (``TOKEN_BYTES`` per token), so the
+  Fig-4 reduction can be *measured* instead of asserted.
+* **Byte accounting.**  Every encode returns a complete frame whose
+  length is the exact number of bytes handed to the kernel; the transport
+  feeds those counts (tx and rx) into ``CommsMeter.record_wire_tx/rx``.
+
+Frame payload layout (all little-endian)::
+
+    u16 magic (0xC0AB)  | u8 version (1) | u8 msg_type | body
+
+Arrays are encoded as ``u8 dtype_code | u8 ndim | u32 dims... | raw``.
+See ``docs/transport.md`` for the full wire-format table.
+"""
+from __future__ import annotations
+
+import math
+import socket
+import struct
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+MAGIC = 0xC0AB
+VERSION = 1
+
+MSG_HELLO = 1
+MSG_HELLO_ACK = 2
+MSG_REQUEST = 3
+MSG_REPLY = 4
+MSG_BYE = 5
+MSG_ERROR = 6
+
+_HEADER = struct.Struct("<HBB")       # magic, version, msg_type
+_LEN = struct.Struct("<I")            # frame length prefix
+MAX_FRAME_BYTES = 64 * 1024 * 1024    # hard cap against garbage prefixes
+
+# dtype registry: stable small codes, no pickle/np dtype-string parsing
+_DTYPES: Tuple[np.dtype, ...] = tuple(np.dtype(d) for d in (
+    np.bool_, np.int8, np.uint8, np.int16, np.int32, np.int64,
+    np.float16, np.float32, np.float64))
+_DTYPE_CODE = {d: i for i, d in enumerate(_DTYPES)}
+
+
+class WireError(Exception):
+    """Malformed frame / protocol violation / server-reported error."""
+
+
+# -- primitives --------------------------------------------------------------
+
+def _pack_array(a: np.ndarray) -> bytes:
+    a = np.ascontiguousarray(a)
+    if a.dtype not in _DTYPE_CODE:
+        raise WireError(f"unsupported wire dtype {a.dtype}")
+    head = struct.pack("<BB", _DTYPE_CODE[a.dtype], a.ndim)
+    dims = struct.pack(f"<{a.ndim}I", *a.shape) if a.ndim else b""
+    return head + dims + a.tobytes()
+
+
+def _unpack_array(buf: bytes, off: int) -> Tuple[np.ndarray, int]:
+    try:
+        code, ndim = struct.unpack_from("<BB", buf, off)
+        off += 2
+        shape = struct.unpack_from(f"<{ndim}I", buf, off) if ndim else ()
+        off += 4 * ndim
+        dtype = _DTYPES[code]
+        n = math.prod(shape)  # python ints: no fixed-width overflow
+        nbytes = n * dtype.itemsize
+        if nbytes > MAX_FRAME_BYTES or off + nbytes > len(buf):
+            raise WireError("array extends past frame end")
+        a = np.frombuffer(buf, dtype=dtype, count=n, offset=off).reshape(shape)
+        off += nbytes
+        return a.copy(), off  # copy: detach from the recv buffer
+    except (struct.error, IndexError, ValueError) as e:
+        raise WireError(f"malformed array: {e}") from e
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    return struct.pack("<H", len(b)) + b
+
+
+def _unpack_str(buf: bytes, off: int) -> Tuple[str, int]:
+    try:
+        (n,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        return buf[off:off + n].decode("utf-8"), off + n
+    except (struct.error, UnicodeDecodeError) as e:
+        raise WireError(f"malformed string: {e}") from e
+
+
+def frame(payload: bytes) -> bytes:
+    """Length-prefix a payload: the exact bytes that hit the socket."""
+    return _LEN.pack(len(payload)) + payload
+
+
+def _header(msg_type: int) -> bytes:
+    return _HEADER.pack(MAGIC, VERSION, msg_type)
+
+
+# -- messages ----------------------------------------------------------------
+
+@dataclass
+class Hello:
+    """Session open: the client declares its stream-batch geometry.
+
+    ``coalesce=False`` opts this session out of the server's request
+    coalescing (each request gets its own masked replay) — the bench's
+    per-request baseline arm.
+    """
+
+    batch: int
+    max_len: int
+    tok_tail: Tuple[int, ...] = ()   # (K,) for audio codebooks, else ()
+    coalesce: bool = True
+    client: str = "edge"
+
+
+@dataclass
+class HelloAck:
+    session_id: int
+    slot_lo: int        # first super-batch row assigned to this session
+    server_max_len: int
+    version: int = VERSION
+
+
+@dataclass
+class WireRequest:
+    """The on-the-wire form of a ``CatchupRequest``: per-stream protocol
+    vectors plus ONLY the backlog tokens (concatenated over triggered
+    streams, in stream order) — not the full history snapshot."""
+
+    req_id: int
+    t: int
+    triggered: np.ndarray    # (B,) bool
+    server_pos: np.ndarray   # (B,) int32
+    u: np.ndarray            # (B,) float32 — dispatch-time monitor scores
+    tokens: np.ndarray       # (n_tok, *tok_tail) int32 — concatenated backlogs
+
+    def backlog_lengths(self) -> np.ndarray:
+        """(B,) tokens each stream contributes to ``tokens``."""
+        return np.where(self.triggered,
+                        self.t + 1 - self.server_pos, 0).astype(np.int64)
+
+
+@dataclass
+class WireReply:
+    req_id: int
+    t: int
+    triggered: np.ndarray    # (B,) bool — echo of the request's mask
+    v: np.ndarray            # (B,) float32, valid where triggered
+    fhat: np.ndarray         # (B,) float32 fused from the request's u
+    server_time_s: float     # replay compute time on the server
+    coalesced: int = 1       # requests merged into the replay that served this
+
+
+@dataclass
+class Bye:
+    pass
+
+
+@dataclass
+class Error:
+    message: str
+
+
+Message = Union[Hello, HelloAck, WireRequest, WireReply, Bye, Error]
+
+
+# -- encode ------------------------------------------------------------------
+
+def encode_hello(h: Hello) -> bytes:
+    body = struct.pack("<IIBB", h.batch, h.max_len, len(h.tok_tail),
+                       1 if h.coalesce else 0)
+    body += struct.pack(f"<{len(h.tok_tail)}I", *h.tok_tail)
+    return frame(_header(MSG_HELLO) + body + _pack_str(h.client))
+
+
+def encode_hello_ack(a: HelloAck) -> bytes:
+    body = struct.pack("<IIIB", a.session_id, a.slot_lo, a.server_max_len,
+                       a.version)
+    return frame(_header(MSG_HELLO_ACK) + body)
+
+
+def encode_request(req_id: int, t: int, triggered: np.ndarray,
+                   server_pos: np.ndarray, u: np.ndarray,
+                   history: np.ndarray) -> bytes:
+    """Slice the triggered backlogs out of the (host) history snapshot and
+    frame them.  ``history``: (B, max_len, *tok_tail) int32."""
+    triggered = np.asarray(triggered, bool)
+    server_pos = np.asarray(server_pos, np.int32)
+    rows = np.flatnonzero(triggered)
+    if len(rows):
+        backlog = np.concatenate(
+            [history[i, server_pos[i]:t + 1] for i in rows], axis=0)
+    else:
+        backlog = np.zeros((0,) + history.shape[2:], history.dtype)
+    body = (struct.pack("<QI", req_id, t)
+            + _pack_array(triggered)
+            + _pack_array(server_pos)
+            + _pack_array(np.asarray(u, np.float32))
+            + _pack_array(np.asarray(backlog, np.int32)))
+    return frame(_header(MSG_REQUEST) + body)
+
+
+def encode_request_arrays(r: WireRequest) -> bytes:
+    """Frame a WireRequest whose backlog tokens are already concatenated
+    (codec round-trip tests; server-side re-encode)."""
+    body = (struct.pack("<QI", r.req_id, r.t)
+            + _pack_array(np.asarray(r.triggered, bool))
+            + _pack_array(np.asarray(r.server_pos, np.int32))
+            + _pack_array(np.asarray(r.u, np.float32))
+            + _pack_array(np.asarray(r.tokens, np.int32)))
+    return frame(_header(MSG_REQUEST) + body)
+
+
+def encode_reply(r: WireReply) -> bytes:
+    body = (struct.pack("<QIdI", r.req_id, r.t, r.server_time_s, r.coalesced)
+            + _pack_array(np.asarray(r.triggered, bool))
+            + _pack_array(np.asarray(r.v, np.float32))
+            + _pack_array(np.asarray(r.fhat, np.float32)))
+    return frame(_header(MSG_REPLY) + body)
+
+
+def encode_bye() -> bytes:
+    return frame(_header(MSG_BYE))
+
+
+def encode_error(message: str) -> bytes:
+    return frame(_header(MSG_ERROR) + _pack_str(message))
+
+
+# -- decode ------------------------------------------------------------------
+
+def decode(payload: bytes) -> Message:
+    """One frame payload (length prefix already stripped) -> message."""
+    if len(payload) < _HEADER.size:
+        raise WireError(f"short frame ({len(payload)} bytes)")
+    magic, version, msg_type = _HEADER.unpack_from(payload, 0)
+    if magic != MAGIC:
+        raise WireError(f"bad magic 0x{magic:04x}")
+    if version != VERSION:
+        raise WireError(f"wire version {version} != supported {VERSION}")
+    off = _HEADER.size
+    try:
+        if msg_type == MSG_HELLO:
+            batch, max_len, n_tail, coal = struct.unpack_from(
+                "<IIBB", payload, off)
+            off += struct.calcsize("<IIBB")
+            tail = struct.unpack_from(f"<{n_tail}I", payload, off)
+            off += 4 * n_tail
+            client, off = _unpack_str(payload, off)
+            return Hello(batch, max_len, tuple(tail), bool(coal), client)
+        if msg_type == MSG_HELLO_ACK:
+            sid, lo, sml, ver = struct.unpack_from("<IIIB", payload, off)
+            return HelloAck(sid, lo, sml, ver)
+        if msg_type == MSG_REQUEST:
+            req_id, t = struct.unpack_from("<QI", payload, off)
+            off += struct.calcsize("<QI")
+            triggered, off = _unpack_array(payload, off)
+            server_pos, off = _unpack_array(payload, off)
+            u, off = _unpack_array(payload, off)
+            tokens, off = _unpack_array(payload, off)
+            return WireRequest(req_id, t, triggered.astype(bool),
+                               server_pos.astype(np.int32),
+                               u.astype(np.float32),
+                               tokens.astype(np.int32))
+        if msg_type == MSG_REPLY:
+            req_id, t, srv_s, coal = struct.unpack_from("<QIdI", payload, off)
+            off += struct.calcsize("<QIdI")
+            triggered, off = _unpack_array(payload, off)
+            v, off = _unpack_array(payload, off)
+            fhat, off = _unpack_array(payload, off)
+            return WireReply(req_id, t, triggered.astype(bool),
+                             v.astype(np.float32), fhat.astype(np.float32),
+                             srv_s, coal)
+        if msg_type == MSG_BYE:
+            return Bye()
+        if msg_type == MSG_ERROR:
+            message, off = _unpack_str(payload, off)
+            return Error(message)
+    # the decode boundary converts EVERY parse failure to WireError: a
+    # hostile/buggy peer must never crash a reactor with anything else
+    except (struct.error, ValueError, IndexError, OverflowError) as e:
+        raise WireError(f"malformed frame body: {e}") from e
+    raise WireError(f"unknown message type {msg_type}")
+
+
+class FrameReader:
+    """Incremental re-framing of a byte stream: feed arbitrary chunks,
+    get back complete frame payloads.  Tolerates any fragmentation the
+    kernel produces (frames split across reads, many frames per read)."""
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[bytes]:
+        self._buf.extend(data)
+        out: List[bytes] = []
+        while True:
+            if len(self._buf) < _LEN.size:
+                return out
+            (n,) = _LEN.unpack_from(self._buf, 0)
+            if n > MAX_FRAME_BYTES:
+                raise WireError(f"frame length {n} exceeds cap")
+            if len(self._buf) < _LEN.size + n:
+                return out
+            out.append(bytes(self._buf[_LEN.size:_LEN.size + n]))
+            del self._buf[:_LEN.size + n]
+
+
+# -- addressing --------------------------------------------------------------
+
+def parse_address(address: str) -> Tuple[int, Union[str, Tuple[str, int]]]:
+    """"/path/to.sock" -> (AF_UNIX, path); "host:port" -> (AF_INET, (h, p))."""
+    if ":" in address and not address.startswith("/"):
+        host, _, port = address.rpartition(":")
+        return socket.AF_INET, (host or "127.0.0.1", int(port))
+    return socket.AF_UNIX, address
+
+
+def connect(address: str, *, timeout: Optional[float] = 20.0,
+            retry_interval: float = 0.05) -> socket.socket:
+    """Connect to a correction server, retrying until ``timeout`` (the
+    server process may still be importing jax when the client starts)."""
+    family, target = parse_address(address)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        try:
+            sock.connect(target)
+            if family == socket.AF_INET:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        except OSError:
+            sock.close()
+            if deadline is not None and time.monotonic() > deadline:
+                raise
+            time.sleep(retry_interval)
