@@ -27,6 +27,14 @@ Workloads:
     simulated.  Run standalone with ``python benchmarks/bench_serving.py
     --transport wire``.
   * granite-8b smoke — LM-scale sanity rows (compute-dominated on CPU).
+  * slot-pool churn sweep (``--churn``, batch 64) — MonitorSession
+    attach/detach at increasing rates: the throughput cost of mid-flight
+    stream admission (cohort-split decodes, cold catch-up backlogs) vs
+    the fixed-batch baseline, written as churn_rate/tokens_per_sec
+    columns to results/bench.csv.
+
+All arms drive the engine through the public ``MonitorSession`` API
+(one ``SessionConfig`` per arm — mode, transport, staleness, coalescing).
 """
 from __future__ import annotations
 
@@ -51,8 +59,14 @@ from repro.configs.paper_synthetic import (SERVING as PAPER_SERVING,
                                            SERVING_WIRE_SLOTS)
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
+from repro.serving import SessionConfig, TransportSpec
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import ServeEngine
+
+
+def _scan(params, cfg, stream, batch, max_len):
+    eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+    return eng.session(SessionConfig(mode="scan")).run(stream)
 
 
 def _bench_pair(name: str, cfg, batch: int, steps: int,
@@ -63,24 +77,29 @@ def _bench_pair(name: str, cfg, batch: int, steps: int,
     max_len = steps + 8
 
     eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+    sess = eng.session()  # sync MonitorSession (the online protocol path)
     warm = 4  # covers trigger AND no-trigger branches (catchup jit included)
     for t in range(warm):
-        eng.step(jnp.asarray(stream[:, t]))
+        sess.step(jnp.asarray(stream[:, t]))
     t0 = time.time()
     for t in range(warm, steps):
-        eng.step(jnp.asarray(stream[:, t]))
+        sess.step(jnp.asarray(stream[:, t]))
     dt_loop = time.time() - t0
     tps_loop = batch * (steps - warm) / dt_loop
-    rep = eng.comms.report()
+    rep = sess.report()
     csv.append(f"serving/{name}_step,{dt_loop / (steps - warm) * 1e6:.1f},"
                f"tokens_per_sec={tps_loop:.0f};"
                f"trigger_rate={rep['trigger_rate']:.3f};"
                f"reduction={rep['reduction_x']:.2f}x")
 
-    sc = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
-    sc.run_scan(stream)  # compile
+    # scan sessions are stateless per run: reuse ONE session so the
+    # timed call measures the compiled scan, not trace + engine init
+    scan_sess = CollaborativeEngine(
+        params, cfg, batch=batch,
+        max_len=max_len).session(SessionConfig(mode="scan"))
+    scan_sess.run(stream)  # compile
     t0 = time.time()
-    res = sc.run_scan(stream)
+    res = scan_sess.run(stream)
     dt_scan = time.time() - t0
     tps_scan = batch * steps / dt_scan
     per = res["comms"]["per_stream"]["reduction_x"]
@@ -93,8 +112,7 @@ def _bench_pair(name: str, cfg, batch: int, steps: int,
 def _calibrate(cfg, params, stream, batch: int, max_len: int, rate: float):
     """Threshold at the 1-rate quantile of a probe u-trace: per-stream
     trigger rate ~``rate`` (the paper's Fig-4 operating region)."""
-    probe = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
-    u = probe.run_scan(stream)["u"]
+    u = _scan(params, cfg, stream, batch, max_len)["u"]
     thr = float(np.quantile(u, 1.0 - rate))
     return cfg.replace(monitor=cfg.monitor.__class__(
         **{**cfg.monitor.__dict__, "threshold": thr, "trigger_margin": 0.0}))
@@ -115,17 +133,19 @@ def _bench_async(name: str, cfg, batch: int, steps: int, csv: List[str], *,
 
     def timed(max_staleness):
         eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
-        eng.start_async(transport="stream", latency_s=latency_s,
-                        max_staleness=max_staleness)
+        sess = eng.session(SessionConfig(
+            mode="async", max_staleness=max_staleness,
+            transport=TransportSpec("stream", latency_s=latency_s)))
+        sess.__enter__()
         outs = []
         for t in range(warm):
-            outs.append(eng.step_async(jnp.asarray(stream[:, t])))
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
         t0 = time.time()
         for t in range(warm, steps):
-            outs.append(eng.step_async(jnp.asarray(stream[:, t])))
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
         # the pipeline-tail drain is timed too: both arms pay every RTT
         # end-to-end (sync's drain is trivially empty)
-        eng.finish_async()
+        sess.close()
         dt = time.time() - t0
         res = {k: np.stack([o[k] for o in outs], 1)
                for k in ("u", "fhat", "triggered")}
@@ -135,8 +155,7 @@ def _bench_async(name: str, cfg, batch: int, steps: int, csv: List[str], *,
     async_eng, async_res, tps_async = timed(staleness)
 
     # strict-sync fallback must match the offline scan (protocol identity)
-    scan = CollaborativeEngine(params, cfg, batch=batch,
-                               max_len=max_len).run_scan(stream)
+    scan = _scan(params, cfg, stream, batch, max_len)
     assert np.array_equal(sync_res["u"], scan["u"])
     assert np.array_equal(sync_res["triggered"], scan["triggered"])
     np.testing.assert_allclose(sync_res["fhat"], scan["fhat"], atol=1e-6)
@@ -185,15 +204,18 @@ def _bench_wire(name: str, cfg, batch: int, steps: int, csv: List[str], *,
         def timed(coalesce: bool):
             eng = CollaborativeEngine(params, cfg, batch=batch,
                                       max_len=max_len)
-            eng.start_async(transport="wire", address=uds,
-                            max_staleness=staleness, wire_coalesce=coalesce)
+            sess = eng.session(SessionConfig(
+                mode="async", max_staleness=staleness,
+                transport=TransportSpec("wire", address=uds,
+                                        coalesce=coalesce)))
+            sess.__enter__()
             outs = []
             for t in range(warm):
-                outs.append(eng.step_async(jnp.asarray(stream[:, t])))
+                outs.append(sess.step(jnp.asarray(stream[:, t])))
             t0 = time.time()
             for t in range(warm, steps):
-                outs.append(eng.step_async(jnp.asarray(stream[:, t])))
-            eng.finish_async()  # both arms pay the pipeline-tail drain
+                outs.append(sess.step(jnp.asarray(stream[:, t])))
+            sess.close()  # both arms pay the pipeline-tail drain
             dt = time.time() - t0
             res = {k: np.stack([o[k] for o in outs], 1)
                    for k in ("u", "triggered")}
@@ -204,8 +226,7 @@ def _bench_wire(name: str, cfg, batch: int, steps: int, csv: List[str], *,
 
         # the measured boundary must not change the protocol: u and the
         # trigger trace are bit-identical to the offline scan
-        scan = CollaborativeEngine(params, cfg, batch=batch,
-                                   max_len=max_len).run_scan(stream)
+        scan = _scan(params, cfg, stream, batch, max_len)
         for res in (perreq_res, coal_res):
             assert np.array_equal(res["u"], scan["u"])
             assert np.array_equal(res["triggered"], scan["triggered"])
@@ -235,6 +256,67 @@ def _bench_wire(name: str, cfg, batch: int, steps: int, csv: List[str], *,
             proc.wait(timeout=10)
         except subprocess.TimeoutExpired:
             proc.kill()
+
+
+def _bench_churn(name: str, cfg, batch: int, steps: int, csv: List[str], *,
+                 rates=(0.0, 0.05, 0.1, 0.2), rate: float = 0.3,
+                 seed: int = 0) -> None:
+    """Slot-pool churn sweep (MonitorSession.attach/detach) at fixed
+    batch: at churn rate r, each step detaches the oldest stream and
+    admits a fresh one with probability r*batch (expected r*batch
+    membership changes per step).  Appends one csv row per rate with
+    ``churn_rate`` and ``tokens_per_sec`` columns — the cost of mid-
+    flight admission (cohort-split decodes + cold catch-up backlogs)
+    relative to the fixed-batch baseline (rate 0)."""
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    probe = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
+    cfg = _calibrate(cfg, params, probe, batch, max_len, rate)
+    rng = np.random.default_rng(seed)
+    # one long token pool: stream k reads row k % batch shifted by k
+    pool = next(tok.lm_batches(1, cfg, batch, max_len))["tokens"]
+    warm = 4
+
+    for churn in rates:
+        eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+        sess = eng.session()
+        born = {sid: 0 for sid in sess.streams}  # id -> first step
+        next_id = batch
+        tokens_served = 0
+        t0 = None
+        for t in range(steps):
+            if t == warm:
+                t0 = time.time()
+            n_events = rng.binomial(batch, churn) if churn > 0 else 0
+            for _ in range(n_events):
+                oldest = min(sess.streams, key=born.get)
+                sess.detach(oldest)
+                born.pop(oldest)
+                sess.attach(next_id)
+                born[next_id] = t
+                next_id += 1
+            toks = {sid: pool[sid % batch, t - born[sid]]
+                    for sid in sess.streams}
+            sess.step(toks)
+            if t >= warm:
+                tokens_served += sess.n_attached
+        dt = time.time() - t0
+        tps = tokens_served / dt
+        rep = sess.report()
+        csv.append(f"serving/{name}_churn,{dt / (steps - warm) * 1e6:.1f},"
+                   f"churn_rate={churn:.2f};tokens_per_sec={tps:.0f};"
+                   f"trigger_rate={rep['trigger_rate']:.3f};"
+                   f"streams_admitted={next_id - batch};"
+                   f"reduction={rep['reduction_x']:.2f}x")
+
+
+def run_churn(csv: List[str]) -> None:
+    """The churn-sweep rows only (bench_serving --churn)."""
+    n0 = len(csv)
+    _bench_churn("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+                 csv=csv)
+    for row in csv[n0:]:
+        print(row, flush=True)
 
 
 def run_wire(csv: List[str]) -> None:
@@ -293,10 +375,18 @@ if __name__ == "__main__":
     ap.add_argument("--transport", choices=("all", "wire"), default="all",
                     help="'wire' runs only the two-process socket bench "
                          "and appends its rows to results/bench.csv")
+    ap.add_argument("--churn", action="store_true",
+                    help="run only the slot-pool churn sweep (attach/"
+                         "detach rates at batch 64) and append its "
+                         "churn_rate/tokens_per_sec rows to "
+                         "results/bench.csv")
     args = ap.parse_args()
     rows: List[str] = []
-    if args.transport == "wire":
-        run_wire(rows)
+    if args.transport == "wire" or args.churn:
+        if args.churn:
+            run_churn(rows)
+        else:
+            run_wire(rows)
         out = os.path.join(os.path.dirname(__file__), "..", "results",
                            "bench.csv")
         with open(out, "a") as fh:

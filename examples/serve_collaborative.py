@@ -4,19 +4,23 @@ warning threshold (paper Fig 1 protocol, LM scale).  Every stream keeps its
 own backlog and server catch-up position — a trigger on one stream never
 touches another stream's comms account.
 
-Trains briefly first so the monitor is meaningful, then serves via the
-online per-element protocol loop, re-evaluates the same traces through
-the compiled lax.scan fast path, and finally serves ASYNC-pipelined
-against a mock-remote server (the catch-up overlaps edge decode; the
-monitor/trigger path is bit-identical, corrections merge one step late) —
-printing per-stream alarm traces, the per-stream communication report,
-the offline-evaluation speedup, and the async overlap accounting.
+Everything is served through the public ``MonitorSession`` API (one
+``SessionConfig`` per arm — see docs/api.md).  Trains briefly first so
+the monitor is meaningful, then serves a sync session (the online
+per-element protocol loop), re-evaluates the same traces through a scan
+session (compiled lax.scan fast path), and finally serves an ASYNC
+session (the catch-up overlaps edge decode; the monitor/trigger path is
+bit-identical, corrections merge one step late) — printing per-stream
+alarm traces, the per-stream communication report, the offline-
+evaluation speedup, and the async overlap accounting.
 
 With ``--wire`` the demo goes end-to-end across a REAL process boundary:
 it checkpoints the trained params, spawns a correction-server subprocess
 (``launch/server.py --ckpt-dir ...``) on a Unix socket, and serves the
 same streams over the ``wire`` transport — the printed RTT and byte
-counts are measured on the socket, not simulated (docs/transport.md).
+counts are measured on the socket, not simulated (docs/transport.md) —
+including mid-session slot-pool churn: one stream detaches and a late
+joiner takes over its (server-side re-leased, zeroed) slot.
 
 Run:  PYTHONPATH=src python examples/serve_collaborative.py --arch granite-8b
       PYTHONPATH=src python examples/serve_collaborative.py \
@@ -36,6 +40,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.data import tokens as tok
+from repro.serving import SessionConfig, TransportSpec
 from repro.serving.collaborative import CollaborativeEngine
 from repro.training.loop import train_collab_lm
 
@@ -67,8 +72,9 @@ def main() -> None:
     stream = next(tok.lm_batches(9, cfg, args.streams, args.length))["tokens"]
     eng = CollaborativeEngine(params, cfg, batch=args.streams,
                               max_len=args.length + 8)
+    session = eng.session()  # sync MonitorSession: the online protocol
     t0 = time.time()
-    res = eng.run(stream)
+    res = session.run(stream)
     dt_loop = time.time() - t0
 
     for b in range(args.streams):
@@ -88,9 +94,10 @@ def main() -> None:
     # offline fast path: same traces, one compiled lax.scan
     scan_eng = CollaborativeEngine(params, cfg, batch=args.streams,
                                    max_len=args.length + 8)
-    scan_eng.run_scan(stream)  # compile
+    scan_sess = scan_eng.session(SessionConfig(mode="scan"))
+    scan_sess.run(stream)  # compile
     t0 = time.time()
-    res_scan = scan_eng.run_scan(stream)
+    res_scan = scan_sess.run(stream)
     dt_scan = time.time() - t0
     same_u = np.array_equal(res_scan["u"], res["u"])
     same_trig = np.array_equal(res_scan["triggered"], res["triggered"])
@@ -105,9 +112,11 @@ def main() -> None:
     # merge one step late (docs/protocol.md)
     aeng = CollaborativeEngine(params, cfg, batch=args.streams,
                                max_len=args.length + 8)
-    res_async = aeng.run_async(stream, transport="stream",
-                               latency_s=args.latency_ms * 1e-3,
-                               max_staleness=args.max_staleness)
+    acfg = SessionConfig(
+        mode="async", max_staleness=args.max_staleness,
+        transport=TransportSpec("stream", latency_s=args.latency_ms * 1e-3))
+    with aeng.session(acfg) as asess:
+        res_async = asess.run(stream)
     print(f"\nasync pipelined ({args.latency_ms:.0f} ms simulated RTT, "
           f"max_staleness={args.max_staleness}): "
           f"u identical: {np.array_equal(res_async['u'], res['u'])}, "
@@ -142,12 +151,24 @@ def main() -> None:
     try:
         weng = CollaborativeEngine(params, cfg, batch=args.streams,
                                    max_len=args.length + 8)
-        res_wire = weng.run_async(stream, transport="wire", address=uds,
-                                  max_staleness=args.max_staleness)
-        print(f"\nwire transport (two processes, UDS): "
-              f"u identical: {np.array_equal(res_wire['u'], res['u'])}, "
-              f"triggers identical: "
-              f"{np.array_equal(res_wire['triggered'], res['triggered'])}")
+        wcfg = SessionConfig(mode="async", max_staleness=args.max_staleness,
+                             transport=TransportSpec("wire", address=uds))
+        with weng.session(wcfg) as wsess:
+            # mid-session churn across the REAL boundary: retire stream 0,
+            # admit a fresh device into the freed slot (the server zeroes
+            # and re-leases the single super-batch row)
+            for t in range(args.length // 2):
+                wsess.step(jnp.asarray(stream[:, t]))
+            wsess.detach(0)
+            wsess.attach("late-joiner")
+            for t in range(args.length // 2, args.length):
+                toks = {sid: stream[sid, t] for sid in wsess.streams
+                        if sid != "late-joiner"}
+                toks["late-joiner"] = stream[0, t - args.length // 2]
+                wsess.step(toks)
+        res_wire = {"comms": weng.comms.report()}
+        print("\nwire transport (two processes, UDS, with mid-session "
+              "attach/detach of one stream):")
         w = res_wire["comms"].get("wire", {})
         if w:
             print(f"  measured on the socket: {w['tx_bytes']:,}B tx / "

@@ -48,7 +48,7 @@ def compact_correction(u: jnp.ndarray, xs: jnp.ndarray, corrector: Callable,
     Returns (fhat, mask, n_triggered).
 
     Contract (load-bearing for the serving scan path — see
-    ``serving/collaborative.py::run_scan``):
+    ``serving/collaborative.py`` scan path, ``SessionConfig(mode="scan")``):
 
     * **Static shapes.** ``capacity`` is a Python int, so the gather buffer
       ``xs[sel]`` has shape (capacity, ...) regardless of how many rows

@@ -5,10 +5,11 @@ Two engines:
   * the default jitted serve step (server decode + corrector, edge decode
     + monitor, gated combine) — the same function the dry-run lowers for
     decode_32k / long_500k; it runs on the host mesh with a reduced config.
-  * ``--engine collab`` — the trigger-gated ``CollaborativeEngine`` with
-    the lazy per-stream server and, with ``--mode async``, the pipelined
-    server catch-up (``--transport``, ``--max-staleness``, ``--latency-ms``
-    — see serving/async_rpc.py and docs/protocol.md).
+  * ``--engine collab`` — the trigger-gated collaborative engine, served
+    through the ``MonitorSession`` API: one ``SessionConfig`` describes
+    the mode (sync / async), transport, staleness, and address
+    (``--transport``, ``--max-staleness``, ``--latency-ms`` — see
+    docs/api.md and docs/protocol.md).
 
 Run:  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \
           --smoke --tokens 64 --batch 4
@@ -33,30 +34,31 @@ from repro.training import checkpoint as ckpt
 
 
 def run_collab(args, cfg, params) -> None:
-    """Trigger-gated CollaborativeEngine serving (sync or async-pipelined)."""
+    """Trigger-gated collaborative serving through the MonitorSession API
+    (sync, or async-pipelined; any transport incl. the real wire)."""
+    from repro.serving import SessionConfig, TransportSpec
     from repro.serving.collaborative import CollaborativeEngine
 
     B, S = args.batch, args.tokens
     stream = next(tok.lm_batches(5, cfg, B, S))["tokens"]
     eng = CollaborativeEngine(params, cfg, batch=B, max_len=S + 8)
+    if args.transport == "wire" and not args.address:
+        raise SystemExit("--transport wire needs --address "
+                         "(start: python -m repro.launch.server)")
+    latency_s = (None if args.latency_ms is None or args.transport in
+                 ("inproc", "wire") else args.latency_ms * 1e-3)
+    # one config describes the whole session: mode="sync" over the wire is
+    # the strict max_staleness=0 boundary (every trigger pays the measured
+    # round trip); plain sync uses the blocking in-process path
+    spec = (TransportSpec(args.transport, address=args.address,
+                          latency_s=latency_s)
+            if (args.mode == "async" or args.transport == "wire")
+            else TransportSpec())
+    config = SessionConfig(mode=args.mode, transport=spec,
+                           max_staleness=args.max_staleness)
     t0 = time.time()
-    if args.transport == "wire":
-        if not args.address:
-            raise SystemExit("--transport wire needs --address "
-                             "(start: python -m repro.launch.server)")
-        # the real boundary works in sync mode too (max_staleness=0):
-        # every trigger pays the measured round trip
-        staleness = args.max_staleness if args.mode == "async" else 0
-        res = eng.run_async(stream, transport="wire", address=args.address,
-                            max_staleness=staleness)
-    elif args.mode == "async":
-        latency_s = (None if args.latency_ms is None
-                     else args.latency_ms * 1e-3)
-        res = eng.run_async(stream, transport=args.transport,
-                            max_staleness=args.max_staleness,
-                            latency_s=latency_s)
-    else:
-        res = eng.run(stream)
+    with eng.session(config) as session:
+        res = session.run(stream)
     dt = (time.time() - t0) / S
     print(f"{args.mode} collab engine: {S} steps x batch {B}:  "
           f"{dt * 1e3:.1f} ms/step  ({B / dt:.1f} tok/s)")

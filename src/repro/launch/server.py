@@ -138,6 +138,7 @@ def main(argv=None) -> None:
         st = srv.stats
         print(f"served {st['sessions']} sessions, {st['requests']} requests "
               f"in {st['replays']} replays ({st['coalesced']} coalesced), "
+              f"{st['attaches']} attaches / {st['detaches']} detaches, "
               f"rx {st['bytes_rx']:,}B tx {st['bytes_tx']:,}B", flush=True)
         srv.close()
 

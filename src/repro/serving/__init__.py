@@ -1,4 +1,14 @@
-from repro.serving import async_rpc, collaborative, engine, wire  # noqa: F401
+"""Serving: the public entrypoint is the session API (``serving/api.py``)
+— build a ``CollaborativeEngine`` (params + caches + protocol state),
+then serve through a ``MonitorSession``:
 
-# repro.serving.server is imported lazily (it builds jitted engines at
-# construction; import it explicitly to run a correction server)
+    from repro.serving import MonitorSession, SessionConfig, TransportSpec
+
+``repro.serving.server`` (the standalone correction server) is imported
+lazily: it builds jitted engines at construction; import it explicitly
+to run one.
+"""
+from repro.serving import async_rpc, collaborative, engine, wire  # noqa: F401
+from repro.serving.api import (MonitorSession, SessionConfig,  # noqa: F401
+                               TransportSpec)
+from repro.serving.collaborative import CollaborativeEngine  # noqa: F401

@@ -55,7 +55,8 @@ STALENESS SEMANTICS (``max_staleness``):
 
   * ``max_staleness == 0`` — strict synchronous fallback: the reply for a
     trigger at step t is merged AT step t (the dispatcher blocks
-    immediately).  Bit-identical to ``CollaborativeEngine.step``.
+    immediately).  Bit-identical to the engine's synchronous step path
+    (what ``SessionConfig(mode="sync")`` over a transport means).
   * ``max_staleness == k >= 1`` — pipelined: a reply merges at the first
     step AFTER its trigger once it has arrived ("corrections merge one
     step late"), and no later than ``t + k`` — the dispatcher blocks the
@@ -63,9 +64,10 @@ STALENESS SEMANTICS (``max_staleness``):
     The monitor path (u, trigger decision) NEVER waits on the server.
 
 Replies deliberately do not carry the server cache: the worker owns it for
-the duration of the async session and the engine re-adopts it once at
-``finish_async`` (after a full drain), which keeps cross-thread ownership
-trivial.  See ``docs/protocol.md`` for the full timeline diagrams.
+the duration of the async session and the engine re-adopts it once when
+the ``MonitorSession`` closes (after a full drain), which keeps
+cross-thread ownership trivial.  See ``docs/protocol.md`` for the full
+timeline diagrams.
 """
 from __future__ import annotations
 
@@ -95,12 +97,17 @@ class CatchupRequest:
     """
 
     req_id: int
-    t: int                      # trigger step (inclusive end of the backlog)
+    t: int                      # trigger POSITION (inclusive end of backlog)
     triggered: np.ndarray       # (B,) bool — which streams this request serves
     server_pos: np.ndarray      # (B,) int — catch-up base per stream
     history: jax.Array          # (B, max_len[, K]) token history snapshot
     u: jax.Array                # (B,) monitor scores at the trigger step
     wall_dispatch: float = 0.0  # time.monotonic() at dispatch
+    # the SESSION step index at dispatch: the staleness clock.  With a
+    # uniform pool it equals ``t``; under slot-pool churn streams carry
+    # their own positions, so ``t`` (a position) and the session clock
+    # diverge — ages are measured on step_t, backlogs on t.
+    step_t: int = -1
 
 
 @dataclass
@@ -112,6 +119,7 @@ class CatchupReply:
     fhat: np.ndarray            # (B,) fused fhat from the DISPATCH-time u
     server_time_s: float        # compute time inside the worker
     wall_ready: float = 0.0     # when the reply became visible (incl. latency)
+    step_t: int = -1            # filled by the Dispatcher from the request
 
 
 class ServerWorker:
@@ -170,8 +178,8 @@ class ServerWorker:
 
     def close(self) -> None:
         """Idempotent on every transport: safe to call twice, and again
-        after ``CollaborativeEngine.finish_async`` (which closes the
-        worker itself)."""
+        after the ``MonitorSession`` closed (which closes the worker
+        itself)."""
         self._closed = True
 
 
@@ -346,7 +354,7 @@ class SocketWorker(ServerWorker):
     The server owns the authoritative server cache (leased super-batch
     rows) and the replayed token history for the whole session; locally,
     ``self.cache`` keeps the engine's initial (cold) cache — with a real
-    boundary there is nothing to re-adopt at ``finish_async``, the
+    boundary there is nothing to re-adopt at session close, the
     protocol state that comes home is ``server_pos`` (carried by every
     reply).  Only the protocol bytes move: each dispatch serializes the
     trigger mask, per-stream catch-up bases, dispatch-time u scores and
@@ -455,9 +463,7 @@ class SocketWorker(ServerWorker):
             req.req_id, int(req.t), req.triggered, req.server_pos,
             np.asarray(req.u, np.float32), np.asarray(req.history))
         self._dispatch_wall[req.req_id] = time.monotonic()
-        self._sock.settimeout(None)
-        self._sock.sendall(buf)
-        self._tx(len(buf))
+        self._send_frame(buf)
 
     def poll(self) -> List[CatchupReply]:
         self._pump(block=False)
@@ -474,6 +480,25 @@ class SocketWorker(ServerWorker):
                 if r.req_id == req_id:
                     return out
             self._pump(block=True)
+
+    # -- slot-pool churn (MonitorSession.attach/detach over the wire) --------
+    def _send_frame(self, buf: bytes) -> None:
+        self._sock.settimeout(None)
+        self._sock.sendall(buf)
+        self._tx(len(buf))
+
+    def attach_slot(self, slot: int) -> None:
+        """Tell the server to zero and re-lease row ``slot`` of this
+        session's lease (a new stream moved in).  Fire-and-forget: the
+        socket is FIFO, so the reset lands before any later REQUEST that
+        includes the slot.  The caller (engine) drains the pipeline
+        first, so no earlier request is still in flight."""
+        self._send_frame(self._wire.encode_attach(slot))
+
+    def detach_slot(self, slot: int) -> None:
+        """Tell the server the stream in row ``slot`` departed (the row
+        is zeroed server-side as hygiene; ATTACH re-zeroes on reuse)."""
+        self._send_frame(self._wire.encode_detach(slot))
 
     def close(self) -> None:
         if self._closed:
@@ -559,10 +584,12 @@ class Dispatcher:
         return len(self._inflight) + len(self._held)
 
     def dispatch(self, *, t: int, triggered: np.ndarray,
-                 server_pos: np.ndarray, history, u) -> CatchupRequest:
+                 server_pos: np.ndarray, history, u,
+                 step_t: Optional[int] = None) -> CatchupRequest:
         req = CatchupRequest(self._next_id, int(t), np.asarray(triggered),
                              np.asarray(server_pos), history, u,
-                             wall_dispatch=time.monotonic())
+                             wall_dispatch=time.monotonic(),
+                             step_t=int(t) if step_t is None else int(step_t))
         self._next_id += 1
         self._inflight.append(req)
         if self.comms is not None:
@@ -574,14 +601,19 @@ class Dispatcher:
         for r in replies:
             req = self._inflight.popleft()
             assert req.req_id == r.req_id, "worker must reply in FIFO order"
+            r.step_t = req.step_t  # the staleness clock rides the request
             if self.comms is not None:
                 self.comms.record_server_busy(
                     r.server_time_s, r.wall_ready - req.wall_dispatch)
             self._held.append(r)
 
     def collect(self, now_t: int) -> List[CatchupReply]:
+        # ages are measured on the SESSION step clock (step_t), not the
+        # request's trigger position t — the two coincide for a uniform
+        # pool but diverge under slot-pool churn
         self._arrived(self.worker.poll())
-        while self._inflight and now_t - self._inflight[0].t >= self.max_staleness:
+        while (self._inflight
+               and now_t - self._inflight[0].step_t >= self.max_staleness):
             t0 = time.monotonic()
             replies = self.worker.wait(self._inflight[0].req_id)
             if self.comms is not None:
@@ -589,10 +621,10 @@ class Dispatcher:
             self._arrived(replies)
         min_age = 1 if self.max_staleness > 0 else 0
         out: List[CatchupReply] = []
-        while self._held and now_t - self._held[0].t >= min_age:
+        while self._held and now_t - self._held[0].step_t >= min_age:
             r = self._held.popleft()
             if self.comms is not None:
-                self.comms.record_merge(r.triggered, now_t - r.t)
+                self.comms.record_merge(r.triggered, now_t - r.step_t)
             out.append(r)
         return out
 
@@ -603,7 +635,8 @@ class Dispatcher:
 
         Re-entrant: once drained (or when nothing was ever dispatched) a
         further ``drain`` touches no worker state and returns ``[]`` —
-        safe to call again after ``finish_async`` or on a closed worker.
+        safe to call again after the session closed or on a closed
+        worker.
         """
         if self._inflight:
             t0 = time.monotonic()

@@ -9,51 +9,76 @@ deployed, batched over independent streams):
           KV/SSM cache on the shipped token backlog, returns the corrector
           -s*sigma(v_t) so the device reports f_hat = u - s*sigma(v).
 
-PER-ELEMENT PROTOCOL.  Each batch element is an independent monitored
-stream with its own backlog and server catch-up position:
+PUBLIC SURFACE.  The one public serving entrypoint is
+``repro.serving.MonitorSession`` (``serving/api.py``): construct a
+``CollaborativeEngine`` (parameters + caches + protocol state), then open
+a session over it — ``engine.session(SessionConfig(...))`` — and drive
+``session.step`` / ``session.run`` / ``session.stream``.  The session
+also owns batch MEMBERSHIP: its slot pool admits and retires monitored
+streams mid-flight (``attach``/``detach``), reusing this engine's
+per-element masked decode and per-stream protocol state.  The legacy
+``run`` / ``run_scan`` / ``run_async`` methods survive only as thin
+deprecated shims over a session.
 
-  * ``server_pos[i]`` — how far the server cache has caught up on stream i.
-    A trigger on stream i ships ONLY stream i's backlog
-    (tokens server_pos[i]..t) and advances ONLY server_pos[i]; stream j's
+PER-ELEMENT PROTOCOL.  Each batch element (SLOT) is an independent
+monitored stream with its own backlog, clock, and server catch-up
+position:
+
+  * ``edge_pos[i]`` — stream i's own time axis: how many tokens its edge
+    tower has decoded.  Streams attached mid-session start at 0 while
+    co-resident slots keep counting — same-position cohorts advance in
+    one dense masked decode (``ServeEngine.decode_masked``, bitwise
+    identical per-row to the plain batched decode).
+  * ``server_pos[i]`` — how far the server cache has caught up on stream
+    i.  A trigger on stream i ships ONLY stream i's backlog (tokens
+    server_pos[i]..t_i) and advances ONLY server_pos[i]; stream j's
     backlog, cache rows, and communication accounting are bit-untouched
     (``ServeEngine.step_at_fn`` masked per-element decode).
   * the backlog itself is implicit: the engine keeps the token history
     (B, max_len) on device, so stream i's backlog is
-    ``history[i, server_pos[i]:t+1]`` — no per-stream Python lists.
-  * ``CommsMeter`` accounts token-level bytes per stream: a trigger on
-    stream i charges len(backlog_i) tokens against stream i only, so the
+    ``history[i, server_pos[i]:t_i+1]`` — no per-stream Python lists.
+  * ``active[i]`` — slot-pool membership.  Detached slots are masked out
+    of decode, trigger, and comms accounting; a reattached slot is
+    bit-cold (caches, history, positions zeroed — ``_attach_slot``).
+  * ``CommsMeter`` accounts token-level bytes per slot: a trigger on
+    stream i charges len(backlog_i) tokens against slot i only, so the
     paper's Fig-4 "reduction x" is measured per stream.  Each token ships
-    at most once => bytes_sent <= bytes_baseline invariantly.
+    at most once => bytes_sent <= bytes_baseline invariantly; detached
+    slots accrue nothing.
 
-Three execution paths:
+Three execution paths (selected by ``SessionConfig.mode``; all private
+here, dispatched to by ``MonitorSession``):
 
-  * ``step`` / ``run`` — the ONLINE protocol path: per-token, lazily
+  * ``_step`` (mode="sync") — the ONLINE protocol path: per-token, lazily
     consults the server (the server cache stays cold until a trigger).
     The fused Pallas ``kernels.monitor_combine`` op (via ``kernels.ops``)
     computes fhat/trigger-mask/safety counters in one pass in the decode
     hot loop.  Each trigger BLOCKS on the server catch-up.
-  * ``step_async`` / ``run_async`` — the PIPELINED online path: a trigger
+  * ``_step_async`` (mode="async") — the PIPELINED online path: a trigger
     dispatches the same masked catch-up to a ``ServerWorker`` (in-process,
     worker-thread, mock-remote, or real-socket ``wire`` transport —
     ``serving/async_rpc.py``; the wire transport talks to the standalone
     correction-server process of ``serving/server.py``, which coalesces
-    queued requests across clients)
-    and the edge loop keeps decoding; corrections merge one step late
-    (``fhat`` picks up the corrector at t+1..t+max_staleness) while the
-    monitor-only u/trigger path stays exact and never waits on the server.
-    ``max_staleness=0`` is the strict synchronous fallback, bit-identical
-    to ``step``.  See docs/protocol.md for the timelines.
-  * ``run_scan`` — the OFFLINE trace-evaluation fast path: one
-    ``jax.lax.scan`` over time (edge + server decoded in lockstep inside
-    jit), routing corrections through ``core.gating.compact_correction``
-    with static capacity (the MoE trick: only ``capacity`` rows hit the
-    corrector head per step).  Produces traces equivalent to the online
-    path (exact when capacity >= batch) at compiled-loop throughput, plus
-    the same per-stream communication accounting derived from the trigger
-    trace.  It does not mutate the engine's protocol state.
+    queued requests across clients) and the edge loop keeps decoding;
+    corrections merge one step late (``fhat`` picks up the corrector at
+    t+1..t+max_staleness) while the monitor-only u/trigger path stays
+    exact and never waits on the server.  ``max_staleness=0`` is the
+    strict synchronous fallback, bit-identical to ``_step``.  See
+    docs/protocol.md for the timelines.
+  * ``_run_scan`` (mode="scan") — the OFFLINE trace-evaluation fast path:
+    one ``jax.lax.scan`` over time (edge + server decoded in lockstep
+    inside jit), routing corrections through
+    ``core.gating.compact_correction`` with static capacity (the MoE
+    trick: only ``capacity`` rows hit the corrector head per step).
+    Produces traces equivalent to the online path (exact when capacity >=
+    batch) at compiled-loop throughput, plus the same per-stream
+    communication accounting derived from the trigger trace.  It does not
+    mutate the engine's protocol state, and membership is fixed (scan
+    sessions reject attach/detach).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -65,13 +90,18 @@ from repro.core import decomposition as deco
 from repro.core.gating import CommsMeter, compact_correction
 from repro.kernels import ops
 from repro.nn.module import linear
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ServeEngine, zero_cache_rows
 
 # payload: one token id (4B) + edge score (4B) per shipped token
 TOKEN_BYTES = 8
 
 
 class CollaborativeEngine:
+    """Parameters, caches, and per-slot protocol state for one batch of
+    monitored streams.  Public surface: construction and the
+    ``session()`` factory (plus the deprecated ``run*`` shims); all
+    serving goes through ``repro.serving.MonitorSession``."""
+
     def __init__(self, params: Dict, cfg: ArchConfig, batch: int, max_len: int,
                  *, capacity: Optional[int] = None,
                  monitor_n: Optional[int] = None):
@@ -86,17 +116,31 @@ class CollaborativeEngine:
         # truncation n for the serving u head (paper Eq. 8); defaults to the
         # training-time n_features, overridable for truncation sweeps
         self.monitor_n = self.m.n_features if monitor_n is None else monitor_n
-        # per-element protocol state
+        # per-slot protocol state (the MonitorSession slot pool drives
+        # active/edge_pos; a fixed full batch is the all-active special case)
         self.server_pos = np.zeros(batch, np.int64)
-        self.t = 0
+        self.edge_pos = np.zeros(batch, np.int64)
+        self.active = np.ones(batch, bool)
+        self.t = 0  # session step counter (staleness clock, NOT a position)
         tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
         self._history = jnp.zeros((batch, max_len) + tok_tail, jnp.int32)
         self.comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=batch)
+        self._dispatcher = None
+        self._worker = None
         self._u_head = jax.jit(self._u_head_impl)
         self._v_head = jax.jit(self._v_head_impl)
-        self._record = jax.jit(self._record_impl)
+        self._record_at = jax.jit(self._record_at_impl)
         self._catchup = jax.jit(self._catchup_impl)
         self._scan = jax.jit(self._scan_impl)
+
+    # -- session factory -----------------------------------------------------
+    def session(self, config=None, *, streams=None, worker=None):
+        """Open a ``MonitorSession`` over this engine — THE public serving
+        entrypoint (see ``serving/api.py``).  ``config``: a
+        ``SessionConfig`` (default: sync mode); ``streams``: initial
+        stream ids to admit (default: ids ``0..batch-1``, the full pool)."""
+        from repro.serving.api import MonitorSession
+        return MonitorSession(self, config, streams=streams, worker=worker)
 
     # -- heads ---------------------------------------------------------------
     def _u_head_impl(self, params, hidden_t):
@@ -113,9 +157,17 @@ class CollaborativeEngine:
         return linear(params["v_head"], hidden_t.astype(jnp.float32))[..., 0]
 
     # -- online (lazy, per-element) path -------------------------------------
-    def _record_impl(self, history, tokens_t, t):
-        return jax.lax.dynamic_update_slice_in_dim(
-            history, tokens_t[:, None].astype(history.dtype), t, axis=1)
+    def _record_at_impl(self, history, tokens_t, pos, active):
+        """Write tokens_t[i] into history[i, pos[i]] where active (inactive
+        slots bit-untouched).  Integer writes: bit-identical to the old
+        uniform dynamic_update_slice when pos is uniform."""
+        B = history.shape[0]
+        idx = jnp.clip(pos, 0, self.max_len - 1)
+        cur = jnp.take_along_axis(
+            history, idx.reshape((B,) + (1,) * (history.ndim - 1)), axis=1)[:, 0]
+        amask = active.reshape((B,) + (1,) * (cur.ndim - 1))
+        new = jnp.where(amask, tokens_t.astype(history.dtype), cur)
+        return history.at[jnp.arange(B), idx].set(new)
 
     def _catchup_impl(self, params, cache, history, server_pos, t, triggered, u):
         """Masked per-element server catch-up + fused correction.
@@ -124,7 +176,10 @@ class CollaborativeEngine:
         history[i, server_pos[i]:t+1] into the server cache at its own
         positions; untriggered streams' cache rows stay bit-identical.
         Rounds run to the LONGEST triggered backlog; streams that finish
-        early (or never started) are masked out per round.
+        early (or never started) are masked out per round.  ``t`` may be
+        a scalar (uniform pool) or a (B,) vector of per-stream end
+        positions (ragged slot pool / server-side coalescing) — the round
+        mask ``pos <= t`` is elementwise either way.
         """
         B = triggered.shape[0]
         step_at = self.server.get_step_at(with_logits=False)
@@ -159,19 +214,36 @@ class CollaborativeEngine:
         return cache, v, fhat
 
     def _monitor_prologue(self, tokens_t):
-        """The edge-only half of one step, shared by ``step`` and
-        ``step_async`` so the two stay bit-identical by construction:
-        record the token, decode on the edge tower, score u, decide the
-        trigger.  Touches no server state."""
-        t = self.t
-        if t >= self.max_len:
+        """The edge-only half of one step, shared by ``_step`` and
+        ``_step_async`` so the two stay bit-identical by construction:
+        record each active slot's token at ITS position, decode on the
+        edge tower (one dense masked call per same-position cohort),
+        score u, decide the trigger.  Touches no server state.  Inactive
+        slots report u = 0 and never trigger."""
+        pos, active = self.edge_pos, self.active
+        if not active.any():
+            raise ValueError("no attached streams (empty slot pool)")
+        if (pos[active] >= self.max_len).any():
             raise ValueError(f"stream longer than max_len={self.max_len}")
         tokens_t = jnp.asarray(tokens_t)
-        self._history = self._record(self._history, tokens_t,
-                                     jnp.asarray(t, jnp.int32))
-        _, hidden = self.edge.decode(tokens_t)
-        u = self._u_head(self.params, hidden)  # (B,) device array
-        triggered = np.asarray(u > self.m.threshold - self.m.trigger_margin)
+        act_j = jnp.asarray(active)
+        self._history = self._record_at(
+            self._history, tokens_t, jnp.asarray(pos, jnp.int32), act_j)
+        # cohort decode: active slots sharing a position advance in one
+        # dense masked decode — per-row bitwise identical to the plain
+        # batched decode, so a uniform pool reproduces the fixed-batch
+        # path bit-for-bit and churn survivors match a fixed-batch run
+        u = None
+        for p in sorted(set(pos[active].tolist())):
+            mask = active & (pos == p)
+            _, hidden = self.edge.decode_masked(tokens_t, int(p),
+                                                jnp.asarray(mask))
+            u_p = self._u_head(self.params, hidden)  # (B,) device array
+            u = u_p if u is None else jnp.where(jnp.asarray(mask), u_p, u)
+        if not active.all():
+            u = jnp.where(act_j, u, 0.0)
+        triggered = np.asarray(
+            u > self.m.threshold - self.m.trigger_margin) & active
         return u, triggered
 
     def _check_not_detached(self) -> None:
@@ -187,49 +259,46 @@ class CollaborativeEngine:
                 "server (wire transport) and was discarded when the "
                 "session closed; create a fresh engine to serve again")
 
-    def step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
-        """One monitoring step over the batch.  Returns u, fhat, triggered."""
-        t, B = self.t, self.batch
+    def _step(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
+        """One synchronous monitoring step over the slot pool.  Returns
+        full-batch u, fhat, triggered (inactive slots: 0/0/False)."""
+        B = self.batch
         self._check_not_detached()
+        active = self.active.copy()
+        t_vec = self.edge_pos.copy()  # per-slot time BEFORE this step
         u, triggered = self._monitor_prologue(tokens_t)
         fhat = np.asarray(u).copy()
         if triggered.any():
+            uniform = active.all() and (t_vec == t_vec[0]).all()
+            # uniform pools pass the scalar t (the original compiled
+            # program); ragged pools pass per-slot end positions
+            t_arg = (jnp.asarray(int(t_vec[0]), jnp.int32) if uniform
+                     else jnp.asarray(t_vec, jnp.int32))
             # each triggered stream ships ITS backlog; others untouched
             cache, v, fhat_j = self._catchup(
                 self.params, self.server.cache, self._history,
-                jnp.asarray(self.server_pos, jnp.int32),
-                jnp.asarray(t, jnp.int32), jnp.asarray(triggered), u)
+                jnp.asarray(self.server_pos, jnp.int32), t_arg,
+                jnp.asarray(triggered), u)
             self.server.cache = cache
             fhat = np.asarray(fhat_j)
-            shipped = np.where(triggered, t + 1 - self.server_pos, 0)
-            self.comms.update_per_stream(shipped, np.ones(B, np.int64))
-            self.server_pos = np.where(triggered, t + 1, self.server_pos)
+            shipped = np.where(triggered, t_vec + 1 - self.server_pos, 0)
+            self.comms.update_per_stream(shipped, active.astype(np.int64))
+            self.server_pos = np.where(triggered, t_vec + 1, self.server_pos)
             self.server.pos = int(self.server_pos.max())
         else:
             self.comms.update_per_stream(np.zeros(B, np.int64),
-                                         np.ones(B, np.int64))
+                                         active.astype(np.int64))
+        self.edge_pos = t_vec + active
         self.t += 1
         return {"u": np.asarray(u), "fhat": fhat, "triggered": triggered}
 
-    def run(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
-        """Online protocol over a full stream: (B, S[,K]) -> stacked traces
-        + comms report.  Per-token Python loop; see ``run_scan`` for the
-        compiled offline path."""
-        S = token_stream.shape[1]
-        us, fhats, trigs = [], [], []
-        for t in range(S):
-            r = self.step(jnp.asarray(token_stream[:, t]))
-            us.append(r["u"]); fhats.append(r["fhat"]); trigs.append(r["triggered"])
-        return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
-                "triggered": np.stack(trigs, 1), "comms": self.comms.report()}
-
     # -- async pipelined online path -----------------------------------------
-    def start_async(self, *, transport: str = "stream",
-                    max_staleness: int = 1,
-                    latency_s: Optional[float] = None,
-                    address: Optional[str] = None,
-                    wire_coalesce: bool = True,
-                    worker=None) -> None:
+    def _start_async(self, *, transport: str = "stream",
+                     max_staleness: int = 1,
+                     latency_s: Optional[float] = None,
+                     address: Optional[str] = None,
+                     wire_coalesce: bool = True,
+                     worker=None) -> None:
         """Open an async serving session: hand the server cache to a
         ``ServerWorker`` and set up the dispatch/merge layer.
 
@@ -238,7 +307,7 @@ class CollaborativeEngine:
         talks to a standalone correction-server PROCESS over a socket —
         the real boundary, RTT/bytes measured not simulated).
         max_staleness: merge window — 0 is the strict synchronous
-        fallback (bit-identical to ``step``); k >= 1 lets a reply land
+        fallback (bit-identical to ``_step``); k >= 1 lets a reply land
         1..k steps after its trigger, blocking the edge loop only at k.
         latency_s: simulated server round trip (stream/thread/mock_remote);
         None keeps the transport's own default.  Rejected for "wire".
@@ -251,7 +320,7 @@ class CollaborativeEngine:
         request coalescing (per-request replays) when False.
         """
         from repro.serving import async_rpc
-        if getattr(self, "_dispatcher", None) is not None:
+        if self._dispatcher is not None:
             raise RuntimeError("async session already open")
         self._check_not_detached()
         if worker is None:
@@ -272,54 +341,74 @@ class CollaborativeEngine:
         # ``server_pos`` (what the protocol state reflects) up to this
         self._dispatch_pos = self.server_pos.copy()
 
-    def step_async(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
+    def _step_async(self, tokens_t: jnp.ndarray) -> Dict[str, np.ndarray]:
         """One pipelined monitoring step.  Identical monitor semantics to
-        ``step`` (u and the trigger decision never wait on the server);
+        ``_step`` (u and the trigger decision never wait on the server);
         corrections from earlier triggers merge into THIS step's fhat.
         """
-        if getattr(self, "_dispatcher", None) is None:
-            raise RuntimeError("call start_async() first")
-        m, t, B = self.m, self.t, self.batch
+        if self._dispatcher is None:
+            raise RuntimeError("no open async session (use MonitorSession)")
+        m, B = self.m, self.batch
+        active = self.active.copy()
+        t_vec = self.edge_pos.copy()
         u, triggered = self._monitor_prologue(tokens_t)
         u_np = np.asarray(u)
         # dispatch first so the synchronous fallback (max_staleness=0)
         # merges this step's own reply below
         if triggered.any():
-            shipped = np.where(triggered, t + 1 - self._dispatch_pos, 0)
-            self._dispatcher.dispatch(
-                t=t, triggered=triggered, server_pos=self._dispatch_pos,
-                history=self._history, u=u)
-            self.comms.update_per_stream(shipped, np.ones(B, np.int64))
-            self._dispatch_pos = np.where(triggered, t + 1,
+            shipped = np.where(triggered, t_vec + 1 - self._dispatch_pos, 0)
+            # one request per same-position cohort, so every request keeps
+            # the scalar-t backlog/wire semantics (a uniform pool is the
+            # single-request special case, bit-identical to before)
+            for p in sorted(set(t_vec[triggered].tolist())):
+                mask_p = triggered & (t_vec == p)
+                self._dispatcher.dispatch(
+                    t=int(p), triggered=mask_p,
+                    server_pos=self._dispatch_pos, history=self._history,
+                    u=u, step_t=self.t)
+            self.comms.update_per_stream(shipped, active.astype(np.int64))
+            self._dispatch_pos = np.where(triggered, t_vec + 1,
                                           self._dispatch_pos)
         else:
             self.comms.update_per_stream(np.zeros(B, np.int64),
-                                         np.ones(B, np.int64))
+                                         active.astype(np.int64))
         fhat = u_np.copy()
-        for r in self._dispatcher.collect(t):
-            if r.t == t:
+        for r in self._dispatcher.collect(self.t):
+            # churn drains before rewriting membership, so a reply's mask
+            # can only reference still-attached slots; the `live` gate is
+            # defensive against both
+            live = r.triggered & self.active
+            if r.step_t == self.t:
                 # same-step merge (sync fallback): the fused fhat computed
-                # from this step's u — bit-identical to ``step``
-                fhat = np.where(r.triggered, r.fhat, fhat)
+                # from this step's u — bit-identical to ``_step``
+                fhat = np.where(live, r.fhat, fhat)
             else:
                 # late merge: the stale corrector applied to TODAY's u.
                 # corr >= 0, so fhat <= u — staleness can only keep a
                 # warning raised, never suppress one (safety semantics)
                 corr = np.asarray(m.s * deco.sigma(jnp.asarray(r.v), m.sigma))
-                fhat = np.where(r.triggered, u_np - corr, fhat)
-            self.server_pos = np.where(r.triggered, r.t + 1, self.server_pos)
+                fhat = np.where(live, u_np - corr, fhat)
+            self.server_pos = np.where(live, r.t + 1, self.server_pos)
+        self.edge_pos = t_vec + active
         self.t += 1
         return {"u": u_np, "fhat": fhat, "triggered": triggered}
 
-    def finish_async(self) -> None:
+    def _drain_async(self) -> None:
+        """Settle every in-flight request (their replies update protocol
+        state only — there is no report step for them).  Required before
+        any slot-pool membership change in async mode: a reply must never
+        land on a slot that has been re-leased since its dispatch."""
+        for r in self._dispatcher.drain():
+            live = r.triggered & self.active
+            self.server_pos = np.where(live, r.t + 1, self.server_pos)
+
+    def _finish_async(self) -> None:
         """Drain outstanding replies (pipeline tail: they update protocol
         state but have no edge step left to report into), re-adopt the
         worker's server cache, and close the session."""
-        d = getattr(self, "_dispatcher", None)
-        if d is None:
+        if self._dispatcher is None:
             return
-        for r in d.drain():
-            self.server_pos = np.where(r.triggered, r.t + 1, self.server_pos)
+        self._drain_async()
         self.server.cache = self._worker.cache
         self.server.pos = int(self.server_pos.max())
         if getattr(self._worker, "kind", None) == "wire":
@@ -330,30 +419,47 @@ class CollaborativeEngine:
         self._worker.close()
         self._dispatcher = self._worker = None
 
-    def run_async(self, token_stream: np.ndarray, *,
-                  transport: str = "stream", max_staleness: int = 1,
-                  latency_s: Optional[float] = None,
-                  address: Optional[str] = None, wire_coalesce: bool = True,
-                  worker=None) -> Dict[str, np.ndarray]:
-        """Pipelined online protocol over a full stream: (B, S[,K]) ->
-        stacked traces + comms report (including the async overlap
-        accounting, and measured wire bytes/RTT for the "wire"
-        transport).  ``max_staleness=0`` reproduces ``run`` bit-for-bit;
-        u and the trigger trace are staleness-independent."""
-        self.start_async(transport=transport, max_staleness=max_staleness,
-                         latency_s=latency_s, address=address,
-                         wire_coalesce=wire_coalesce, worker=worker)
-        try:
-            S = token_stream.shape[1]
-            us, fhats, trigs = [], [], []
-            for t in range(S):
-                r = self.step_async(jnp.asarray(token_stream[:, t]))
-                us.append(r["u"]); fhats.append(r["fhat"])
-                trigs.append(r["triggered"])
-        finally:
-            self.finish_async()
-        return {"u": np.stack(us, 1), "fhat": np.stack(fhats, 1),
-                "triggered": np.stack(trigs, 1), "comms": self.comms.report()}
+    # -- slot pool (driven by MonitorSession.attach/detach) -------------------
+    def _attach_slot(self, slot: int) -> None:
+        """Admit a new stream into ``slot``: every per-slot state the
+        previous tenant left behind is reset to bit-cold zeros (edge +
+        server cache rows, token history, positions), exactly as if the
+        slot belonged to a freshly-built engine.  In async mode the
+        pipeline is drained first and, over the wire, an ATTACH frame
+        tells the correction server to zero and re-lease its row."""
+        rows = np.zeros(self.batch, bool)
+        rows[slot] = True
+        if self._dispatcher is not None:
+            self._drain_async()
+        self.edge.zero_rows(rows)
+        if (self._dispatcher is not None
+                and getattr(self._worker, "kind", None) == "wire"):
+            self._worker.attach_slot(slot)
+        elif self._dispatcher is not None:
+            # the worker owns the server cache for the session; after the
+            # drain no compute is in flight, so the functional row reset
+            # is race-free on every local transport
+            self._worker.cache = zero_cache_rows(
+                self._worker.cache, self.server.axes, jnp.asarray(rows))
+        else:
+            self.server.zero_rows(rows)
+        self._history = self._history.at[slot].set(0)
+        self.server_pos[slot] = 0
+        self.edge_pos[slot] = 0
+        if self._dispatcher is not None:
+            self._dispatch_pos[slot] = 0
+        self.active[slot] = True
+
+    def _detach_slot(self, slot: int) -> None:
+        """Retire the stream in ``slot``: masked out of decode, trigger,
+        and comms accounting from the next step on.  Its state is left in
+        place (attach zeroes on reuse); in async mode the pipeline is
+        drained first so no in-flight reply can land on the freed slot."""
+        if self._dispatcher is not None:
+            self._drain_async()
+            if getattr(self._worker, "kind", None) == "wire":
+                self._worker.detach_slot(slot)
+        self.active[slot] = False
 
     # -- offline scan fast path ----------------------------------------------
     def _scan_impl(self, params, tokens):
@@ -396,14 +502,15 @@ class CollaborativeEngine:
         return (jnp.moveaxis(u, 0, 1), jnp.moveaxis(fhat, 0, 1),
                 jnp.moveaxis(trig, 0, 1), jnp.moveaxis(served, 0, 1))
 
-    def run_scan(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
-        """Offline trace evaluation: same protocol semantics as ``run``
-        (exact when capacity == batch; capacity-limited correction
-        otherwise), compiled into a single scan.  Scratch caches — the
-        engine's online protocol state (server laziness, comms meter) is
-        not mutated.  Comms are derived per stream from the trigger trace:
-        a trigger at time t ships the backlog since that stream's previous
-        trigger, so total shipped = last-trigger index + 1."""
+    def _run_scan(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
+        """Offline trace evaluation: same protocol semantics as the sync
+        online path (exact when capacity == batch; capacity-limited
+        correction otherwise), compiled into a single scan.  Scratch
+        caches — the engine's online protocol state (server laziness,
+        comms meter) is not mutated.  Comms are derived per stream from
+        the trigger trace: a trigger at time t ships the backlog since
+        that stream's previous trigger, so total shipped = last-trigger
+        index + 1."""
         tokens = jnp.asarray(token_stream)
         B, S = tokens.shape[0], tokens.shape[1]
         if S > self.max_len:
@@ -418,3 +525,40 @@ class CollaborativeEngine:
         return {"u": np.asarray(u), "fhat": np.asarray(fhat),
                 "triggered": trig_np, "served": np.asarray(served),
                 "comms": comms.report()}
+
+    # -- deprecated shims (the pre-session public surface) --------------------
+    def _session_shim(self, mode, name, worker=None, **cfg_kw):
+        from repro.serving.api import SessionConfig
+        warnings.warn(
+            f"CollaborativeEngine.{name}() is deprecated: open a "
+            f"MonitorSession instead — engine.session(SessionConfig("
+            f"mode={mode!r}, ...)).run(stream)  (see docs/api.md)",
+            DeprecationWarning, stacklevel=3)
+        return self.session(SessionConfig(mode=mode, **cfg_kw),
+                            worker=worker)
+
+    def run(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
+        """DEPRECATED: thin shim over ``MonitorSession`` (sync mode).
+        Bit-identical to ``session(SessionConfig(mode="sync")).run(...)``
+        — asserted in tests."""
+        with self._session_shim("sync", "run") as s:
+            return s.run(token_stream)
+
+    def run_scan(self, token_stream: np.ndarray) -> Dict[str, np.ndarray]:
+        """DEPRECATED: thin shim over ``MonitorSession`` (scan mode)."""
+        with self._session_shim("scan", "run_scan") as s:
+            return s.run(token_stream)
+
+    def run_async(self, token_stream: np.ndarray, *,
+                  transport: str = "stream", max_staleness: int = 1,
+                  latency_s: Optional[float] = None,
+                  address: Optional[str] = None, wire_coalesce: bool = True,
+                  worker=None) -> Dict[str, np.ndarray]:
+        """DEPRECATED: thin shim over ``MonitorSession`` (async mode)."""
+        from repro.serving.api import TransportSpec
+        spec = TransportSpec(kind=transport, address=address,
+                             latency_s=latency_s, coalesce=wire_coalesce)
+        with self._session_shim("async", "run_async", worker=worker,
+                                transport=spec,
+                                max_staleness=max_staleness) as s:
+            return s.run(token_stream)

@@ -55,6 +55,26 @@ def cache_batch_axes(cfg: ArchConfig, batch: int, max_len: int):
     return jax.tree.map(find, a, b)
 
 
+def zero_cache_rows(cache, axes, rows: jnp.ndarray):
+    """Zero the selected batch rows of every cache leaf.
+
+    ``rows``: (B,) bool mask along each leaf's discovered batch axis
+    (``cache_batch_axes``).  Used when a slot is re-leased to a new
+    stream (correction-server session turnover, ``MonitorSession``
+    attach): the new tenant must see bit-cold cache rows, exactly as if
+    the cache had just been built, while co-resident rows stay
+    bit-untouched.
+    """
+    rows = jnp.asarray(rows, bool)
+
+    def z(a, ax):
+        shape = [1] * a.ndim
+        shape[ax] = rows.shape[0]
+        return jnp.where(jnp.reshape(rows, shape), jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(z, cache, axes)
+
+
 def make_step_at(cfg: ArchConfig, axes, *, with_logits: bool = True):
     """Pure per-element decode step with vector positions and active mask.
 
@@ -126,12 +146,46 @@ class ServeEngine:
         self.pos = 0
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._step = jax.jit(self._step_impl)
+        self._step_masked = jax.jit(self._step_masked_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._step_at = {}  # built lazily (per-element decode), per variant
+        self._axes = None   # cache_batch_axes, built lazily
+
+    @property
+    def axes(self):
+        """Batch-axis tree of the cache leaves (``cache_batch_axes``)."""
+        if self._axes is None:
+            self._axes = cache_batch_axes(self.cfg, self.batch, self.max_len)
+        return self._axes
 
     # -- jitted kernels ----------------------------------------------------
     def _step_impl(self, params, cache, tokens, pos):
         return model_api.decode_step(params, self.cfg, cache, tokens, pos)
+
+    def _step_masked_impl(self, params, cache, tokens, pos, mask):
+        """Dense decode at one scalar position with a batch mask: every
+        element is decoded (discarded compute), but elements with
+        ``mask[i] == False`` get their cache rows back bit-unchanged.
+
+        Unlike ``make_step_at`` (vmapped singleton decode, which rounds
+        differently from the batched matmul), this is the SAME dense
+        ``decode_step`` subgraph with a leafwise select epilogue — masked
+        rows are bitwise identical to the plain batched ``decode``
+        (asserted in tests).  It is the cohort primitive the
+        ``MonitorSession`` slot pool uses: streams admitted at different
+        times share one engine by decoding each same-position cohort in
+        one dense masked call.
+        """
+        logits, hidden, new_cache = model_api.decode_step(
+            params, self.cfg, cache, tokens, pos)
+
+        def merge(new, old, ax):
+            shape = [1] * new.ndim
+            shape[ax] = mask.shape[0]
+            return jnp.where(jnp.reshape(mask, shape), new, old)
+
+        cache = jax.tree.map(merge, new_cache, cache, self.axes)
+        return logits, hidden, cache
 
     def _prefill_impl(self, params, cache, tokens, pos0):
         """tokens: (B, S0) (or (B,S0,K) audio); scans decode_step over S0."""
@@ -162,6 +216,25 @@ class ServeEngine:
             self.params, self.cache, tokens_t, jnp.asarray(self.pos, jnp.int32))
         self.pos += 1
         return logits, hidden
+
+    def decode_masked(self, tokens_t: jnp.ndarray, pos: int,
+                      mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One dense decode at scalar ``pos`` where only ``mask`` rows
+        commit their cache writes (masked-out rows bit-untouched; their
+        logits/hidden are garbage — callers gate on ``mask``).  The
+        engine's scalar ``self.pos`` is NOT advanced: cohort callers
+        (``MonitorSession``) track per-slot positions themselves."""
+        logits, hidden, self.cache = self._step_masked(
+            self.params, self.cache, tokens_t, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(mask, bool))
+        return logits, hidden
+
+    def zero_rows(self, rows) -> None:
+        """Reset the selected batch rows of the cache to bit-cold zeros
+        (``rows``: (B,) bool).  Slot-pool hygiene: a re-leased slot must
+        start exactly as a fresh engine would."""
+        self.cache = zero_cache_rows(self.cache, self.axes,
+                                     jnp.asarray(rows, bool))
 
     def get_step_at(self, with_logits: bool = True) -> Callable:
         """Pure per-element decode fn (params, cache, tokens, pos(B,),

@@ -71,7 +71,7 @@ from repro.configs.base import ArchConfig
 from repro.core import decomposition as deco
 from repro.serving import wire
 from repro.serving.collaborative import CollaborativeEngine
-from repro.serving.engine import cache_batch_axes
+from repro.serving.engine import cache_batch_axes, zero_cache_rows
 
 
 @dataclass
@@ -130,7 +130,8 @@ class CorrectionServer:
         self._next_sid = 1
         self._pending: List[Tuple[Session, wire.WireRequest]] = []
         self.stats = {"requests": 0, "replays": 0, "coalesced": 0,
-                      "sessions": 0, "bytes_rx": 0, "bytes_tx": 0}
+                      "sessions": 0, "bytes_rx": 0, "bytes_tx": 0,
+                      "attaches": 0, "detaches": 0}
 
         # -- listener ---------------------------------------------------------
         self.uds = uds
@@ -172,13 +173,13 @@ class CorrectionServer:
         self._free = merged
 
     def _reset_rows(self, lo: int, hi: int) -> None:
-        """Zero a leased range: a new session must see cold cache rows even
-        if a previous tenant used them."""
-        def z(a, ax):
-            idx = [slice(None)] * a.ndim
-            idx[ax] = slice(lo, hi)
-            return a.at[tuple(idx)].set(jnp.zeros((), a.dtype))
-        self._cache = jax.tree.map(z, self._cache, self._axes)
+        """Zero a leased range: a new session (or a re-leased slot — the
+        ATTACH churn frame) must see cold cache rows even if a previous
+        tenant used them."""
+        rows = np.zeros(self.slots, bool)
+        rows[lo:hi] = True
+        self._cache = zero_cache_rows(self._cache, self._axes,
+                                      jnp.asarray(rows))
         self._history[lo:hi] = 0
 
     # -- socket plumbing -----------------------------------------------------
@@ -301,6 +302,25 @@ class CorrectionServer:
                 self._drop(sess)
                 return
             self._pending.append((sess, msg))
+        elif isinstance(msg, (wire.Attach, wire.Detach)):
+            # slot-pool churn: one row of THIS session's lease turns over.
+            # The client drains its pipeline before churning, so no
+            # request of this session that references the row is queued;
+            # other sessions cannot reference it at all (lease geometry).
+            if sess.lo < 0:
+                self._send(sess, wire.encode_error("churn before HELLO"))
+                self._drop(sess)
+                return
+            if not 0 <= msg.slot < sess.batch:
+                self._send(sess, wire.encode_error(
+                    f"churn slot {msg.slot} outside lease batch "
+                    f"({sess.batch},)"))
+                self._drop(sess)
+                return
+            row = sess.lo + msg.slot
+            self._reset_rows(row, row + 1)
+            key = "attaches" if isinstance(msg, wire.Attach) else "detaches"
+            self.stats[key] += 1
         elif isinstance(msg, wire.Bye):
             self._flush(sess)
             self._drop(sess)

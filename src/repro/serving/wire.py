@@ -28,10 +28,17 @@ Design constraints (the reason this module exists, rather than pickle):
 
 Frame payload layout (all little-endian)::
 
-    u16 magic (0xC0AB)  | u8 version (1) | u8 msg_type | body
+    u16 magic (0xC0AB)  | u8 version (2) | u8 msg_type | body
 
 Arrays are encoded as ``u8 dtype_code | u8 ndim | u32 dims... | raw``.
 See ``docs/transport.md`` for the full wire-format table.
+
+Version history: v2 added the slot-pool churn frames ATTACH/DETACH
+(``MonitorSession.attach``/``detach`` over the wire: the server zeroes
+and re-leases a single super-batch row without disturbing co-resident
+clients).  Version mismatches are rejected loudly on BOTH sides — a v1
+peer gets an ERROR frame naming the versions, never silent
+misinterpretation.
 """
 from __future__ import annotations
 
@@ -45,7 +52,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 MAGIC = 0xC0AB
-VERSION = 1
+VERSION = 2  # v2: ATTACH/DETACH slot-pool churn frames
 
 MSG_HELLO = 1
 MSG_HELLO_ACK = 2
@@ -53,6 +60,8 @@ MSG_REQUEST = 3
 MSG_REPLY = 4
 MSG_BYE = 5
 MSG_ERROR = 6
+MSG_ATTACH = 7
+MSG_DETACH = 8
 
 _HEADER = struct.Struct("<HBB")       # magic, version, msg_type
 _LEN = struct.Struct("<I")            # frame length prefix
@@ -183,11 +192,28 @@ class Bye:
 
 
 @dataclass
+class Attach:
+    """Slot-pool churn: a new stream moved into row ``slot`` of this
+    session's lease — zero and re-lease that single super-batch row
+    (cache + history mirror), leaving co-resident rows bit-untouched."""
+
+    slot: int
+
+
+@dataclass
+class Detach:
+    """Slot-pool churn: the stream in row ``slot`` departed."""
+
+    slot: int
+
+
+@dataclass
 class Error:
     message: str
 
 
-Message = Union[Hello, HelloAck, WireRequest, WireReply, Bye, Error]
+Message = Union[Hello, HelloAck, WireRequest, WireReply, Bye, Attach,
+                Detach, Error]
 
 
 # -- encode ------------------------------------------------------------------
@@ -249,6 +275,14 @@ def encode_bye() -> bytes:
     return frame(_header(MSG_BYE))
 
 
+def encode_attach(slot: int) -> bytes:
+    return frame(_header(MSG_ATTACH) + struct.pack("<I", slot))
+
+
+def encode_detach(slot: int) -> bytes:
+    return frame(_header(MSG_DETACH) + struct.pack("<I", slot))
+
+
 def encode_error(message: str) -> bytes:
     return frame(_header(MSG_ERROR) + _pack_str(message))
 
@@ -299,6 +333,12 @@ def decode(payload: bytes) -> Message:
                              srv_s, coal)
         if msg_type == MSG_BYE:
             return Bye()
+        if msg_type == MSG_ATTACH:
+            (slot,) = struct.unpack_from("<I", payload, off)
+            return Attach(slot)
+        if msg_type == MSG_DETACH:
+            (slot,) = struct.unpack_from("<I", payload, off)
+            return Detach(slot)
         if msg_type == MSG_ERROR:
             message, off = _unpack_str(payload, off)
             return Error(message)

@@ -1,0 +1,252 @@
+"""Slot-pool churn: streams attach/detach mid-session (MonitorSession),
+locally and over the wire.
+
+Invariants under churn (the acceptance set):
+
+  * streams present for the whole run are BIT-IDENTICAL (u/trigger, and
+    fhat in sync mode) to a fixed-batch run — admission and departure of
+    neighbours never perturbs a co-resident stream;
+  * a detached slot stops accruing communication charges;
+  * a reused slot starts from a cold backlog: the new tenant's traces
+    match a fresh fixed-batch engine's bit-for-bit, and its server
+    catch-up starts at position 0;
+  * over the wire, ATTACH/DETACH frames re-lease single super-batch rows
+    without disturbing co-resident clients of the same server process.
+"""
+import os
+import subprocess
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.paper_synthetic import SERVING
+from repro.core import decomposition as deco
+from repro.data import tokens as tok
+from repro.serving import SessionConfig, TransportSpec
+from repro.serving.collaborative import CollaborativeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(cfg_base=None, threshold=0.1, batch=3, length=16, seed=0):
+    cfg = cfg_base if cfg_base is not None else registry.get_smoke("granite-8b")
+    cfg = cfg.replace(monitor=cfg.monitor.__class__(
+        **{**cfg.monitor.__dict__, "threshold": threshold,
+           "trigger_margin": 0.0}))
+    params = deco.init_collab_lm(KEY, cfg)
+    stream = next(tok.lm_batches(seed, cfg, batch, length))["tokens"]
+    return cfg, params, stream
+
+
+def _trace(outs, sid, k):
+    return np.asarray([o[k] for o in outs[sid]])
+
+
+class TestLocalChurn:
+    def test_churn_smoke(self):
+        """CI churn smoke: one attach + one detach mid-session on the
+        sync path; survivors bit-identical to a fixed-batch run, the
+        joiner bit-cold."""
+        self._check_mode(SessionConfig(mode="sync"))
+
+    @pytest.mark.parametrize("config", [
+        SessionConfig(mode="async", transport="inproc", max_staleness=2),
+        SessionConfig(mode="async",
+                      transport=TransportSpec("stream", latency_s=0.003),
+                      max_staleness=3),
+    ], ids=["async-inproc", "async-stream"])
+    def test_churn_async(self, config):
+        self._check_mode(config)
+
+    def _check_mode(self, config, make_session=None):
+        S, detach_at, attach_at = 16, 6, 9
+        cfg, params, stream = _setup(length=S)
+        fresh = next(tok.lm_batches(7, cfg, 1, S))["tokens"][0]
+
+        # fixed-batch references (no churn): the original trio, and the
+        # joiner "d" occupying slot 1 of a fresh engine from its step 0
+        ref = CollaborativeEngine(params, cfg, batch=3,
+                                  max_len=32).session().run(stream)
+        joined = np.stack([stream[0], fresh, stream[2]])
+        ref_d = CollaborativeEngine(params, cfg, batch=3,
+                                    max_len=32).session().run(joined)
+
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        if make_session is None:
+            session = eng.session(config, streams=["a", "b", "c"])
+        else:
+            session = make_session(eng)
+        with session:
+            seen_at_detach = None
+            outs = {sid: [] for sid in "abcd"}
+            for t in range(S):
+                if t == detach_at:
+                    session.detach("b")
+                    seen_at_detach = int(eng.comms.tokens_seen[1])
+                if t == attach_at:
+                    assert session.attach("d") == 1
+                toks = {sid: stream[{"a": 0, "b": 1, "c": 2}[sid], t]
+                        for sid in session.streams if sid != "d"}
+                if "d" in session.streams:
+                    toks["d"] = fresh[t - attach_at]
+                r = session.step(toks)
+                for i, sid in enumerate(r["streams"]):
+                    outs[sid].append((r["u"][i], r["fhat"][i],
+                                      r["triggered"][i]))
+
+        # streams present the whole run: bit-identical to the fixed batch
+        for sid, row in (("a", 0), ("c", 2)):
+            np.testing.assert_array_equal(_trace(outs, sid, 0),
+                                          ref["u"][row])
+            np.testing.assert_array_equal(_trace(outs, sid, 2),
+                                          ref["triggered"][row])
+            if config.mode == "sync":
+                np.testing.assert_array_equal(_trace(outs, sid, 1),
+                                              ref["fhat"][row])
+            else:  # async merges are late; safety still holds
+                assert bool(np.all(_trace(outs, sid, 1)
+                                   <= _trace(outs, sid, 0) + 1e-6))
+        # the departed stream matched the reference while it was attached
+        np.testing.assert_array_equal(_trace(outs, "b", 0),
+                                      ref["u"][1][:detach_at])
+
+        # detached slot stops accruing comms: steps detach_at..attach_at-1
+        # charge nothing to slot 1
+        seen_final = int(eng.comms.tokens_seen[1])
+        assert seen_at_detach == detach_at
+        assert seen_final == seen_at_detach + (S - attach_at), \
+            "detached slot accrued charges while empty"
+
+        # reused slot is bit-cold: the joiner matches a fresh fixed-batch
+        # engine, and its server catch-up restarted from position 0
+        np.testing.assert_array_equal(_trace(outs, "d", 0),
+                                      ref_d["u"][1][:S - attach_at])
+        np.testing.assert_array_equal(_trace(outs, "d", 2),
+                                      ref_d["triggered"][1][:S - attach_at])
+        assert 0 <= eng.server_pos[1] <= S - attach_at
+
+    def test_detached_slots_ship_nothing_even_when_loud(self):
+        """A detached slot must not trigger or ship even with a monitor
+        that would always page."""
+        cfg, params, stream = _setup(threshold=-1e9, length=10)
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        s = eng.session(streams=["a", "b", "c"])
+        for t in range(4):
+            s.step({sid: stream[i, t]
+                    for i, sid in enumerate(("a", "b", "c"))})
+        s.detach("b")
+        sent_before = eng.comms.tokens_sent.copy()
+        for t in range(4, 10):
+            s.step({"a": stream[0, t], "c": stream[2, t]})
+        assert eng.comms.tokens_sent[1] == sent_before[1]
+        assert eng.comms.tokens_sent[0] > sent_before[0]
+        assert eng.server_pos[1] == 4, "detached slot's server state frozen"
+
+    def test_pool_full_and_duplicate_ids(self):
+        cfg, params, stream = _setup()
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        s = eng.session(streams=["a", "b", "c"])
+        with pytest.raises(RuntimeError, match="full"):
+            s.attach("x")
+        s.detach("b")
+        with pytest.raises(ValueError, match="already attached"):
+            s.attach("a")
+        with pytest.raises(KeyError):
+            s.detach("nope")
+        assert s.attach("x") == 1
+        assert s.streams == ("a", "x", "c")
+
+
+class TestWireChurn:
+    """Acceptance: two CONCURRENT clients attach/detach against ONE
+    correction-server subprocess; each client's surviving streams stay
+    bit-identical to local fixed-batch runs and the server re-leases
+    single rows without disturbing the co-resident client."""
+
+    def test_two_clients_churn_against_one_server(self):
+        S, detach_at, attach_at = 14, 5, 8
+        cfg, params, _ = _setup(cfg_base=SERVING, length=S)
+        stream_a = next(tok.lm_batches(1, cfg, 3, S))["tokens"]
+        stream_b = next(tok.lm_batches(2, cfg, 3, S))["tokens"]
+        fresh_a = next(tok.lm_batches(3, cfg, 1, S))["tokens"][0]
+        fresh_b = next(tok.lm_batches(4, cfg, 1, S))["tokens"][0]
+
+        # local fixed-batch references
+        refs = {}
+        for tag, stream, fresh in (("A", stream_a, fresh_a),
+                                   ("B", stream_b, fresh_b)):
+            refs[tag] = CollaborativeEngine(
+                params, cfg, batch=3, max_len=32).session().run(stream)
+            joined = np.stack([stream[0], fresh, stream[2]])
+            refs[tag + "d"] = CollaborativeEngine(
+                params, cfg, batch=3, max_len=32).session().run(joined)
+
+        tmp = tempfile.mkdtemp(prefix="wire_churn_")
+        uds = os.path.join(tmp, "s.sock")
+        from repro.launch.server import spawn_subprocess
+        proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
+                                slots=8, max_len=32,
+                                ready_file=os.path.join(tmp, "ready"))
+        try:
+            wcfg = SessionConfig(
+                mode="async", max_staleness=2,
+                transport=TransportSpec("wire", address=uds))
+            ea = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+            eb = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+            sa = ea.session(wcfg, streams=["a", "b", "c"]).__enter__()
+            sb = eb.session(wcfg, streams=["a", "b", "c"]).__enter__()
+            outs = {"A": {sid: [] for sid in "abcd"},
+                    "B": {sid: [] for sid in "abcd"}}
+            # interleave the two clients' steps; both churn mid-flight
+            # (B one step after A, so the server sees staggered
+            # ATTACH/DETACH across coalesced request queues)
+            for t in range(S):
+                for tag, sess, stream, fresh, off in (
+                        ("A", sa, stream_a, fresh_a, 0),
+                        ("B", sb, stream_b, fresh_b, 1)):
+                    if t == detach_at + off:
+                        sess.detach("b")
+                    if t == attach_at + off:
+                        assert sess.attach("d") == 1
+                    toks = {sid: stream[{"a": 0, "b": 1, "c": 2}[sid], t]
+                            for sid in sess.streams if sid != "d"}
+                    if "d" in sess.streams:
+                        toks["d"] = fresh[t - (attach_at + off)]
+                    r = sess.step(toks)
+                    for i, sid in enumerate(r["streams"]):
+                        outs[tag][sid].append(
+                            (r["u"][i], r["fhat"][i], r["triggered"][i]))
+            sa.close()
+            sb.close()
+
+            for tag, off in (("A", 0), ("B", 1)):
+                o = outs[tag]
+                # survivors bit-identical to the local fixed-batch run
+                for sid, row in (("a", 0), ("c", 2)):
+                    np.testing.assert_array_equal(
+                        _trace(o, sid, 0), refs[tag]["u"][row])
+                    np.testing.assert_array_equal(
+                        _trace(o, sid, 2), refs[tag]["triggered"][row])
+                    assert bool(np.all(_trace(o, sid, 1)
+                                       <= _trace(o, sid, 0) + 1e-6))
+                # the joiner is bit-cold on its re-leased server row
+                n_d = S - (attach_at + off)
+                np.testing.assert_array_equal(
+                    _trace(o, "d", 0), refs[tag + "d"]["u"][1][:n_d])
+                np.testing.assert_array_equal(
+                    _trace(o, "d", 2),
+                    refs[tag + "d"]["triggered"][1][:n_d])
+            # both engines measured real wire traffic
+            for eng in (ea, eb):
+                w = eng.comms.report()["wire"]
+                assert w["tx_bytes"] > 0 and w["replies"] > 0
+        finally:
+            proc.terminate()
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()

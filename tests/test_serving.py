@@ -7,10 +7,29 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import registry
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
+from repro.serving import SessionConfig, TransportSpec
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import ServeEngine
 
 KEY = jax.random.PRNGKey(0)
+
+
+# every caller goes through the public MonitorSession API; the deprecated
+# engine shims get their own dedicated test (tests/test_api.py)
+def run_sync(eng, stream):
+    return eng.session().run(stream)
+
+
+def run_scan(eng, stream):
+    return eng.session(SessionConfig(mode="scan")).run(stream)
+
+
+def run_async(eng, stream, *, transport="stream", max_staleness=1,
+              latency_s=None, address=None):
+    spec = TransportSpec(transport, address=address, latency_s=latency_s)
+    with eng.session(SessionConfig(mode="async", transport=spec,
+                                   max_staleness=max_staleness)) as s:
+        return s.run(stream)
 
 
 class TestServeEngine:
@@ -92,7 +111,7 @@ class TestCollaborativeEngine:
         cfg, params = self._engine(threshold=1e9)  # unreachable
         eng = CollaborativeEngine(params, cfg, batch=2, max_len=64)
         stream = next(tok.lm_batches(0, cfg, 2, 12))["tokens"]
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         assert res["triggered"].sum() == 0
         assert res["comms"]["bytes_sent"] == 0
         assert eng.server.pos == 0, "server cache must stay cold"
@@ -104,7 +123,7 @@ class TestCollaborativeEngine:
         cfg, params = self._engine(threshold=-1e9)
         eng = CollaborativeEngine(params, cfg, batch=2, max_len=64)
         stream = next(tok.lm_batches(0, cfg, 2, 10))["tokens"]
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         assert res["triggered"].all()
         assert eng.server.pos == 10
         assert res["comms"]["reduction_x"] <= 1.0 + 1e-6
@@ -119,7 +138,7 @@ class TestCollaborativeEngine:
         eng._u_head = jax.jit(
             lambda p, h: jnp.where(jnp.arange(h.shape[0]) == 0, 1.0, -1.0))
         stream = next(tok.lm_batches(3, cfg, 2, 40))["tokens"]
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         trig_rate = res["triggered"].mean()
         assert 0.0 < trig_rate < 1.0, "stub must produce mixed triggering"
         assert res["comms"]["bytes_sent"] < res["comms"]["bytes_baseline"]
@@ -136,7 +155,7 @@ class TestCollaborativeEngine:
         eng = CollaborativeEngine(params, cfg, batch=2, max_len=128)
         eng._u_head = jax.jit(lambda p, h: jnp.tanh(10.0 * h[..., 0]))
         stream = next(tok.lm_batches(3, cfg, 2, 40))["tokens"]
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         assert 0.0 < res["triggered"].mean() < 1.0
         assert res["comms"]["bytes_sent"] <= res["comms"]["bytes_baseline"]
         per = res["comms"]["per_stream"]
@@ -167,7 +186,7 @@ class TestBatchedScanPath:
         cfg, params, stream = self._setup()
         B, S = stream.shape[:2]
         eng = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        rs = eng.run_scan(stream)
+        rs = run_scan(eng, stream)
 
         m, ecfg = cfg.monitor, deco.edge_arch(cfg)
         ecache = model_api.init_cache(ecfg, B, eng.max_len)
@@ -208,9 +227,9 @@ class TestBatchedScanPath:
         cfg, params, stream = self._setup()
         B = stream.shape[0]
         lazy = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r1 = lazy.run(stream)
+        r1 = run_sync(lazy, stream)
         scan = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r2 = scan.run_scan(stream)
+        r2 = run_scan(scan, stream)
         assert 0.0 < r1["triggered"].mean() < 1.0, "need mixed triggers"
         np.testing.assert_array_equal(r1["u"], r2["u"])
         np.testing.assert_array_equal(r1["triggered"], r2["triggered"])
@@ -228,7 +247,7 @@ class TestBatchedScanPath:
         eng._u_head = jax.jit(
             lambda p, h: jnp.where(jnp.arange(h.shape[0]) == 0, 1.0, -1.0))
         server_k_before = np.asarray(eng.server.cache["blocks"].k).copy()
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         assert res["triggered"][0].all() and not res["triggered"][1].any()
         # stream 0 caught up to the end; stream 1's server state untouched
         assert eng.server_pos[0] == 12 and eng.server_pos[1] == 0
@@ -247,7 +266,7 @@ class TestBatchedScanPath:
         cfg, params, stream = self._setup(batch=2, length=8)
         eng = CollaborativeEngine(params, cfg, batch=2, max_len=16,
                                   monitor_n=cfg.monitor.n_features // 2)
-        res = eng.run(stream)
+        res = run_sync(eng, stream)
         # training-side reference with the same truncation
         m = cfg.monitor
         from repro.nn.module import linear
@@ -262,7 +281,7 @@ class TestBatchedScanPath:
                                    atol=2e-3, rtol=2e-3)
         # and with a truncated n the serving scores differ from full-basis
         eng_full = CollaborativeEngine(params, cfg, batch=2, max_len=16)
-        res_full = eng_full.run(stream)
+        res_full = run_sync(eng_full, stream)
         assert not np.allclose(res["u"], res_full["u"])
 
 
@@ -286,9 +305,9 @@ class TestAsyncPipelinedEngine:
         cfg, params, stream = self._setup()
         B = stream.shape[0]
         sync = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r1 = sync.run(stream)
+        r1 = run_sync(sync, stream)
         a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r0 = a.run_async(stream, transport="inproc", max_staleness=0)
+        r0 = run_async(a, stream, transport="inproc", max_staleness=0)
         assert 0.0 < r1["triggered"].mean() < 1.0, "need mixed triggers"
         np.testing.assert_array_equal(r0["u"], r1["u"])
         np.testing.assert_array_equal(r0["fhat"], r1["fhat"])
@@ -310,9 +329,9 @@ class TestAsyncPipelinedEngine:
         cfg, params, stream = self._setup()
         B = stream.shape[0]
         scan = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        rs = scan.run_scan(stream)
+        rs = run_scan(scan, stream)
         a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r0 = a.run_async(stream, transport="inproc", max_staleness=0)
+        r0 = run_async(a, stream, transport="inproc", max_staleness=0)
         np.testing.assert_array_equal(r0["u"], rs["u"])
         np.testing.assert_array_equal(r0["triggered"], rs["triggered"])
         np.testing.assert_allclose(r0["fhat"], rs["fhat"], atol=1e-6)
@@ -327,9 +346,9 @@ class TestAsyncPipelinedEngine:
         cfg, params, stream = self._setup(threshold=threshold, batch=2,
                                           length=8)
         scan = CollaborativeEngine(params, cfg, batch=2, max_len=16)
-        rs = scan.run_scan(stream)
+        rs = run_scan(scan, stream)
         a = CollaborativeEngine(params, cfg, batch=2, max_len=16)
-        ra = a.run_async(stream, transport="inproc", max_staleness=staleness)
+        ra = run_async(a, stream, transport="inproc", max_staleness=staleness)
         np.testing.assert_array_equal(ra["u"], rs["u"])
         np.testing.assert_array_equal(ra["triggered"], rs["triggered"])
         assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
@@ -342,14 +361,14 @@ class TestAsyncPipelinedEngine:
         stub = jax.jit(lambda p, h: jnp.ones(h.shape[0], jnp.float32))
         sync = CollaborativeEngine(params, cfg, batch=2, max_len=16)
         sync._u_head = stub
-        r1 = sync.run(stream)
+        r1 = run_sync(sync, stream)
         assert r1["triggered"].all()
         corr_sync = r1["u"] - r1["fhat"]  # s*sigma(v_t) per step
         assert (corr_sync > 0).any(), "corrector must actually fire"
 
         a = CollaborativeEngine(params, cfg, batch=2, max_len=16)
         a._u_head = stub
-        ra = a.run_async(stream, transport="inproc", max_staleness=2)
+        ra = run_async(a, stream, transport="inproc", max_staleness=2)
         assert ra["triggered"].all()
         # step 0: no reply merged yet -> monitor-only report
         np.testing.assert_array_equal(ra["fhat"][:, 0], ra["u"][:, 0])
@@ -366,12 +385,12 @@ class TestAsyncPipelinedEngine:
         cfg, params, stream = self._setup()
         B = stream.shape[0]
         sync = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        r1 = sync.run(stream)
+        r1 = run_sync(sync, stream)
         for transport, latency in (("stream", 0.003), ("thread", 0.003),
                                    ("mock_remote", 0.003)):
             a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-            ra = a.run_async(stream, transport=transport, latency_s=latency,
-                             max_staleness=4)
+            ra = run_async(a, stream, transport=transport, latency_s=latency,
+                           max_staleness=4)
             np.testing.assert_array_equal(ra["u"], r1["u"])
             np.testing.assert_array_equal(ra["triggered"], r1["triggered"])
             assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
@@ -397,7 +416,7 @@ class TestAsyncPipelinedEngine:
             orig = a.comms.record_merge
             a.comms.record_merge = lambda m, age: (ages.append(age),
                                                    orig(m, age))
-            a.run_async(stream, transport="inproc", max_staleness=k)
+            run_async(a, stream, transport="inproc", max_staleness=k)
             assert ages, "must have merged something"
             assert all(1 <= g <= k for g in ages)
 
@@ -405,7 +424,7 @@ class TestAsyncPipelinedEngine:
         cfg, params, stream = self._setup(threshold=1e9)
         B = stream.shape[0]
         a = CollaborativeEngine(params, cfg, batch=B, max_len=32)
-        ra = a.run_async(stream, transport="stream", max_staleness=4)
+        ra = run_async(a, stream, transport="stream", max_staleness=4)
         assert ra["triggered"].sum() == 0
         assert ra["comms"]["bytes_sent"] == 0
         assert "async" not in ra["comms"], "no requests -> no async section"

@@ -19,10 +19,25 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.paper_synthetic import SERVING
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
-from repro.serving import async_rpc, wire
+from repro.serving import SessionConfig, TransportSpec, async_rpc, wire
 from repro.serving.collaborative import CollaborativeEngine
 
 KEY = jax.random.PRNGKey(0)
+
+
+def run_scan(eng, stream):
+    return eng.session(SessionConfig(mode="scan")).run(stream)
+
+
+def run_sync(eng, stream):
+    return eng.session().run(stream)
+
+
+def run_wire(eng, stream, *, address, max_staleness):
+    cfg = SessionConfig(mode="async", max_staleness=max_staleness,
+                        transport=TransportSpec("wire", address=address))
+    with eng.session(cfg) as s:
+        return s.run(stream)
 
 
 def _cfg(threshold=0.1):
@@ -113,8 +128,22 @@ class TestCodec:
         assert wire.decode(p) == a
         (p,) = wire.FrameReader().feed(wire.encode_bye())
         assert isinstance(wire.decode(p), wire.Bye)
+        (p,) = wire.FrameReader().feed(wire.encode_attach(3))
+        assert wire.decode(p) == wire.Attach(3)
+        (p,) = wire.FrameReader().feed(wire.encode_detach(7))
+        assert wire.decode(p) == wire.Detach(7)
         (p,) = wire.FrameReader().feed(wire.encode_error("boom"))
         assert wire.decode(p) == wire.Error("boom")
+
+    def test_old_protocol_version_rejected_loudly(self):
+        """The v2 bump (ATTACH/DETACH churn frames) must reject v1 peers
+        with an error NAMING both versions — never silent
+        misinterpretation of the old layout."""
+        assert wire.VERSION == 2
+        good = wire.FrameReader().feed(wire.encode_bye())[0]
+        v1 = good[:2] + b"\x01" + good[3:]
+        with pytest.raises(wire.WireError, match="version 1.*supported 2"):
+            wire.decode(v1)
 
     def test_frame_reader_reassembles_any_fragmentation(self):
         frames = [wire.encode_bye(), wire.encode_error("x" * 300),
@@ -190,14 +219,15 @@ class TestTransportRegistry:
         params = deco.init_collab_lm(KEY, cfg)
         stream = next(tok.lm_batches(0, cfg, 2, 6))["tokens"]
         eng = CollaborativeEngine(params, cfg, batch=2, max_len=16)
-        eng.start_async(transport="inproc", max_staleness=2)
+        sess = eng.session(SessionConfig(mode="async", transport="inproc",
+                                         max_staleness=2)).__enter__()
         disp, worker = eng._dispatcher, eng._worker
         for t in range(6):
-            eng.step_async(jnp.asarray(stream[:, t]))
-        eng.finish_async()
-        worker.close()            # second close (finish_async already did)
+            sess.step(jnp.asarray(stream[:, t]))
+        sess.close()
+        worker.close()            # second close (session close already did)
         worker.close()
-        assert disp.drain() == [] # re-entrant after finish_async
+        assert disp.drain() == [] # re-entrant after close
         assert disp.drain() == []
 
 
@@ -230,12 +260,11 @@ class TestWireLoopback:
         cfg, params, uds, srv = wire_server
         stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
         scan = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        rs = scan.run_scan(stream)
+        rs = run_scan(scan, stream)
         sync = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        r1 = sync.run(stream)
+        r1 = run_sync(sync, stream)
         a = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        r0 = a.run_async(stream, transport="wire", address=uds,
-                         max_staleness=0)
+        r0 = run_wire(a, stream, address=uds, max_staleness=0)
         assert 0.0 < r0["triggered"].mean() < 1.0, "need mixed triggers"
         np.testing.assert_array_equal(r0["u"], rs["u"])
         np.testing.assert_array_equal(r0["triggered"], rs["triggered"])
@@ -258,12 +287,11 @@ class TestWireLoopback:
         cfg, params, uds, srv = wire_server
         stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
         scan = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        rs = scan.run_scan(stream)
+        rs = run_scan(scan, stream)
         sync = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        r1 = sync.run(stream)
+        r1 = run_sync(sync, stream)
         a = CollaborativeEngine(params, cfg, batch=3, max_len=32)
-        ra = a.run_async(stream, transport="wire", address=uds,
-                         max_staleness=4)
+        ra = run_wire(a, stream, address=uds, max_staleness=4)
         np.testing.assert_array_equal(ra["u"], rs["u"])
         np.testing.assert_array_equal(ra["triggered"], rs["triggered"])
         assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
@@ -286,18 +314,20 @@ class TestWireLoopback:
 
         # local references, no wire
         ref_b = CollaborativeEngine(params, cfg, batch=2, max_len=32)
-        rb_ref = ref_b.run(stream_b)
+        rb_ref = run_sync(ref_b, stream_b)
 
         a = CollaborativeEngine(params, loud_cfg, batch=2, max_len=32)
         b = CollaborativeEngine(params, cfg, batch=2, max_len=32)
-        a.start_async(transport="wire", address=uds, max_staleness=2)
-        b.start_async(transport="wire", address=uds, max_staleness=2)
+        wcfg = SessionConfig(mode="async", max_staleness=2,
+                             transport=TransportSpec("wire", address=uds))
+        sa = a.session(wcfg).__enter__()
+        sb = b.session(wcfg).__enter__()
         outs_a, outs_b = [], []
         for t in range(12):
-            outs_a.append(a.step_async(jnp.asarray(stream_a[:, t])))
-            outs_b.append(b.step_async(jnp.asarray(stream_b[:, t])))
-        a.finish_async()
-        b.finish_async()
+            outs_a.append(sa.step(jnp.asarray(stream_a[:, t])))
+            outs_b.append(sb.step(jnp.asarray(stream_b[:, t])))
+        sa.close()
+        sb.close()
         res_b = {k: np.stack([o[k] for o in outs_b], 1)
                  for k in ("u", "fhat", "triggered")}
         res_a_trig = np.stack([o["triggered"] for o in outs_a], 1)
@@ -361,6 +391,43 @@ class TestWireLoopback:
             assert sock.recv(1 << 16) == b"", "server must drop the session"
         finally:
             sock.close()
+        # a v1 peer is rejected LOUDLY: the server answers an ERROR frame
+        # naming both versions, then drops the connection
+        sock = wire.connect(uds, timeout=10)
+        try:
+            sock.settimeout(10.0)
+            hello = wire.encode_hello(wire.Hello(batch=1, max_len=16))
+            v1 = hello[:6] + b"\x01" + hello[7:]  # patch the version byte
+            sock.sendall(v1)
+            rd = wire.FrameReader()
+            msgs = []
+            while not msgs:
+                data = sock.recv(1 << 16)
+                assert data, "server closed without replying"
+                msgs = [wire.decode(p) for p in rd.feed(data)]
+            assert isinstance(msgs[0], wire.Error)
+            assert "version 1" in msgs[0].message
+            assert "2" in msgs[0].message
+        finally:
+            sock.close()
+        # churn frames are validated against the lease like requests
+        sock = wire.connect(uds, timeout=10)
+        try:
+            sock.settimeout(10.0)
+            sock.sendall(wire.encode_hello(wire.Hello(batch=2, max_len=16)))
+            rd = wire.FrameReader()
+            msgs = []
+            while not msgs:
+                msgs = [wire.decode(p) for p in rd.feed(sock.recv(1 << 16))]
+            assert isinstance(msgs[0], wire.HelloAck)
+            sock.sendall(wire.encode_attach(99))  # outside the lease
+            msgs = []
+            while not msgs:
+                msgs = [wire.decode(p) for p in rd.feed(sock.recv(1 << 16))]
+            assert isinstance(msgs[0], wire.Error)
+            assert "lease" in msgs[0].message
+        finally:
+            sock.close()
 
     def test_engine_detached_after_wire_session(self, wire_server):
         """With a real boundary the server-side state dies with the
@@ -368,11 +435,12 @@ class TestWireLoopback:
         cfg, params, uds, srv = wire_server
         stream = next(tok.lm_batches(4, cfg, 2, 8))["tokens"]
         a = CollaborativeEngine(params, cfg, batch=2, max_len=32)
-        a.run_async(stream, transport="wire", address=uds, max_staleness=2)
+        run_wire(a, stream, address=uds, max_staleness=2)
         with pytest.raises(RuntimeError, match="remote correction server"):
-            a.step(jnp.asarray(stream[:, 0]))
+            a.session().step(jnp.asarray(stream[:, 0]))
         with pytest.raises(RuntimeError, match="remote correction server"):
-            a.start_async(transport="inproc")
+            a.session(SessionConfig(mode="async",
+                                    transport="inproc")).__enter__()
 
 
 class TestCoalescing:
@@ -487,10 +555,9 @@ class TestTwoProcessSmoke:
                 assert time.monotonic() < deadline, "server startup timeout"
                 time.sleep(0.05)
             eng = CollaborativeEngine(params, cfg, batch=2, max_len=24)
-            res = eng.run_async(stream, transport="wire", address=uds,
-                                max_staleness=2)
+            res = run_wire(eng, stream, address=uds, max_staleness=2)
             scan = CollaborativeEngine(params, cfg, batch=2, max_len=24)
-            rs = scan.run_scan(stream)
+            rs = run_scan(scan, stream)
             np.testing.assert_array_equal(res["u"], rs["u"])
             np.testing.assert_array_equal(res["triggered"], rs["triggered"])
             assert bool(np.all(res["fhat"] <= res["u"] + 1e-6))
