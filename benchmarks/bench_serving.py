@@ -32,6 +32,12 @@ Workloads:
     stream admission (cohort-split decodes, cold catch-up backlogs) vs
     the fixed-batch baseline, written as churn_rate/tokens_per_sec
     columns to results/bench.csv.
+  * mesh-sharding sweep (``--devices N``) — batch {256, 1024} x host
+    mesh {1, 2, 4, 8} devices (each point its own subprocess under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``): the
+    collective-free sharded monitor path (``SessionConfig(mesh=...)``,
+    docs/sharding.md), with per-device super-batch cache bytes —
+    devices/batch/tokens_per_sec/cache_bytes_per_device columns.
 
 All arms drive the engine through the public ``MonitorSession`` API
 (one ``SessionConfig`` per arm — mode, transport, staleness, coalescing).
@@ -310,6 +316,71 @@ def _bench_churn(name: str, cfg, batch: int, steps: int, csv: List[str], *,
                    f"reduction={rep['reduction_x']:.2f}x")
 
 
+def _mesh_child_row(devices: int, batch: int, steps: int = 20) -> str:
+    """Runs INSIDE the child process (XLA_FLAGS already pinned by the
+    parent): one sharded sync session on the collective-free monitor
+    path (threshold pushed above every u, so no stream triggers — the
+    mesh scales the every-token edge path; the trigger path is the
+    server's own bench).  Returns the csv row."""
+    import dataclasses
+
+    from repro.serving import mesh as mesh_mod
+
+    assert jax.device_count() >= devices, (jax.device_count(), devices)
+    cfg = PAPER_SERVING.replace(monitor=dataclasses.replace(
+        PAPER_SERVING.monitor, threshold=1e9, trigger_margin=0.0))
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    eng = CollaborativeEngine(params, cfg, batch=batch, max_len=steps + 4,
+                              mesh=f"data:{devices}")
+    sess = eng.session()
+    warm = 3
+    for t in range(warm):
+        sess.step(jnp.asarray(stream[:, t]))
+    t0 = time.time()
+    for t in range(warm, steps):
+        sess.step(jnp.asarray(stream[:, t]))
+    dt = time.time() - t0
+    tps = batch * (steps - warm) / dt
+    cache_bytes = (mesh_mod.bytes_per_device(eng.server.cache)
+                   + mesh_mod.bytes_per_device(eng.edge.cache))
+    return (f"serving/mesh_b{batch}_d{devices},"
+            f"{dt / (steps - warm) * 1e6:.1f},"
+            f"devices={devices};batch={batch};tokens_per_sec={tps:.0f};"
+            f"cache_bytes_per_device={cache_bytes}")
+
+
+def run_mesh_sweep(csv: List[str], max_devices: int) -> None:
+    """The ``--devices N`` arm: spawn one subprocess per (devices, batch)
+    point — the placeholder host device count is an XLA startup flag, so
+    each point needs its own jax process — and collect the
+    devices/batch/tokens_per_sec/cache_bytes_per_device rows."""
+    n0 = len(csv)
+    for devices in (1, 2, 4, 8):
+        if devices > max_devices:
+            continue
+        for batch in (256, 1024):
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                env.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={devices}"
+            ).strip()
+            r = subprocess.run(
+                [sys.executable, os.path.abspath(__file__),
+                 "--_mesh-child", str(devices), str(batch)],
+                capture_output=True, text=True, env=env, timeout=1200)
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"mesh child d={devices} b={batch} failed:\n"
+                    + r.stderr[-2000:])
+            rows = [l[len("MESHROW "):] for l in r.stdout.splitlines()
+                    if l.startswith("MESHROW ")]
+            assert len(rows) == 1, r.stdout[-2000:]
+            csv.extend(rows)
+    for row in csv[n0:]:
+        print(row, flush=True)
+
+
 def run_churn(csv: List[str]) -> None:
     """The churn-sweep rows only (bench_serving --churn)."""
     n0 = len(csv)
@@ -380,11 +451,25 @@ if __name__ == "__main__":
                          "detach rates at batch 64) and append its "
                          "churn_rate/tokens_per_sec rows to "
                          "results/bench.csv")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="run only the mesh-sharding sweep: batch {256,"
+                         "1024} x devices {1,2,4,8} up to N, each point "
+                         "in its own subprocess under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count, "
+                         "appending devices/batch/tokens_per_sec/"
+                         "cache_bytes_per_device rows to results/bench.csv")
+    ap.add_argument("--_mesh-child", nargs=2, type=int, default=None,
+                    metavar=("D", "B"), help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args._mesh_child is not None:
+        print("MESHROW " + _mesh_child_row(*args._mesh_child), flush=True)
+        sys.exit(0)
     rows: List[str] = []
-    if args.transport == "wire" or args.churn:
+    if args.transport == "wire" or args.churn or args.devices is not None:
         if args.churn:
             run_churn(rows)
+        elif args.devices is not None:
+            run_mesh_sweep(rows, args.devices)
         else:
             run_wire(rows)
         out = os.path.join(os.path.dirname(__file__), "..", "results",

@@ -163,6 +163,10 @@ def cache_specs(cache_tree: Any, mesh: Mesh, batch: int, *,
       to a masked per-shard update.
     """
     model = mesh.shape.get("model", 1)
+    # a mesh without a model axis (serving data-parallel meshes, e.g.
+    # "data:8") must never emit a "model" spec entry — model % 1 == 0
+    # would otherwise qualify every trailing dim
+    use_model = use_model and "model" in mesh.shape
     daxes = data_axes(mesh)
     dtotal = 1
     for a in daxes:

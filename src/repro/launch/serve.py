@@ -55,7 +55,8 @@ def run_collab(args, cfg, params) -> None:
             if (args.mode == "async" or args.transport == "wire")
             else TransportSpec())
     config = SessionConfig(mode=args.mode, transport=spec,
-                           max_staleness=args.max_staleness)
+                           max_staleness=args.max_staleness,
+                           mesh=args.mesh)
     t0 = time.time()
     with eng.session(config) as session:
         res = session.run(stream)
@@ -99,7 +100,17 @@ def main() -> None:
     ap.add_argument("--max-staleness", type=int, default=8)
     ap.add_argument("--latency-ms", type=float, default=None,
                     help="simulated RTT; default keeps the transport's own")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="collab engine only: mesh-shard per-stream state, "
+                         "e.g. 'data:8' (batch must divide; see "
+                         "docs/sharding.md)")
     args = ap.parse_args()
+
+    if args.mesh is not None:
+        if args.engine != "collab":
+            ap.error("--mesh serves the collab engine (use --engine collab)")
+        from repro.launch.server import _force_host_devices
+        _force_host_devices(args.mesh)  # before the first jax computation
 
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_full(args.arch)
     key = jax.random.PRNGKey(0)

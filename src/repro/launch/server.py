@@ -83,6 +83,21 @@ def spawn_subprocess(arch: str, *, uds: str, slots: int, max_len: int,
     return proc
 
 
+def _force_host_devices(mesh: str) -> None:
+    """CPU convenience for ``--mesh data:N``: pin the placeholder host
+    device count so a plain CPU host (which exposes ONE device) can
+    build the mesh.  Must run before the first jax computation — the
+    backend initialises lazily, so appending to XLA_FLAGS here works as
+    long as nothing has touched devices yet.  A count already pinned in
+    XLA_FLAGS wins; the flag only affects the host (CPU) platform."""
+    from repro.serving.mesh import MeshSpec
+    n = MeshSpec.parse(mesh).n_devices
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", required=True, choices=config_names())
@@ -97,6 +112,11 @@ def main(argv=None) -> None:
     ap.add_argument("--no-coalesce", action="store_true",
                     help="disable request coalescing server-wide "
                          "(per-request replays; the bench baseline)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="shard the super-batch cache over a device mesh, "
+                         "e.g. 'data:8' (slots must divide; on a CPU host "
+                         "the placeholder device count is forced "
+                         "automatically — see docs/sharding.md)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ready-file", default=None,
                     help="touch this path once listening (subprocess sync)")
@@ -106,6 +126,13 @@ def main(argv=None) -> None:
 
     if (args.uds is None) == (args.port is None):
         ap.error("exactly one of --uds / --port is required")
+
+    if args.mesh is not None:
+        # must precede the first jax computation: a CPU host exposes one
+        # device unless the platform device count is forced.  jax was
+        # only IMPORTED above (the backend initialises lazily at first
+        # use), so setting XLA_FLAGS here still takes effect.
+        _force_host_devices(args.mesh)
 
     cfg = resolve_config(args.arch, args.smoke)
     params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
@@ -118,10 +145,10 @@ def main(argv=None) -> None:
                            max_len=args.max_len, uds=args.uds,
                            host=args.host,
                            port=args.port if args.port is not None else 0,
-                           coalesce=not args.no_coalesce)
+                           coalesce=not args.no_coalesce, mesh=args.mesh)
     print(f"correction server: arch={args.arch} slots={args.slots} "
           f"max_len={args.max_len} coalesce={not args.no_coalesce} "
-          f"listening on {srv.address}", flush=True)
+          f"mesh={srv.mesh_spec} listening on {srv.address}", flush=True)
     if args.ready_file:
         with open(args.ready_file, "w") as fh:
             fh.write(srv.address + "\n")
@@ -139,6 +166,8 @@ def main(argv=None) -> None:
         print(f"served {st['sessions']} sessions, {st['requests']} requests "
               f"in {st['replays']} replays ({st['coalesced']} coalesced), "
               f"{st['attaches']} attaches / {st['detaches']} detaches, "
+              f"{st['defrags']} lease defrags "
+              f"(lease_fragmentation={srv.fragmentation():.3f}), "
               f"rx {st['bytes_rx']:,}B tx {st['bytes_tx']:,}B", flush=True)
         srv.close()
 

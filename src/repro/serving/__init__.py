@@ -6,9 +6,10 @@ then serve through a ``MonitorSession``:
 
 ``repro.serving.server`` (the standalone correction server) is imported
 lazily: it builds jitted engines at construction; import it explicitly
-to run one.
+to run one.  Mesh-sharded serving (``SessionConfig(mesh="data:8")``)
+lives in ``repro.serving.mesh`` — see docs/sharding.md.
 """
-from repro.serving import async_rpc, collaborative, engine, wire  # noqa: F401
+from repro.serving import async_rpc, collaborative, engine, mesh, wire  # noqa: F401,E501
 from repro.serving.api import (MonitorSession, SessionConfig,  # noqa: F401
                                TransportSpec)
 from repro.serving.collaborative import CollaborativeEngine  # noqa: F401

@@ -135,6 +135,14 @@ class SessionConfig:
                      never waits).
     transport      — a ``TransportSpec`` or parseable string.
     max_staleness  — async merge window (ignored for sync/scan).
+    mesh           — mesh-sharded serving (``serving/mesh.py``): a
+                     ``MeshSpec`` or ``"data:8"``-style string.  The
+                     session shards the engine at open — params
+                     replicated, per-stream state batch-sharded over
+                     the mesh ``data`` axis, monitor path asserted
+                     collective-free.  Per-row numerics are unchanged
+                     (NOT an operating point: an engine already sharded
+                     over the same mesh is accepted as-is).
     threshold / trigger_margin — monitor operating-point overrides,
                      applied at engine construction by
                      ``MonitorSession.open`` (an existing engine must
@@ -151,6 +159,7 @@ class SessionConfig:
     trigger_margin: Optional[float] = None
     capacity: Optional[int] = None
     monitor_n: Optional[int] = None
+    mesh: Optional[Any] = None  # MeshSpec | "data:8" | None (unsharded)
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -163,6 +172,9 @@ class SessionConfig:
             raise ValueError("max_staleness must be >= 0")
         if self.mode == "scan" and self.transport != TransportSpec():
             raise ValueError("scan mode is offline: it takes no transport")
+        if self.mesh is not None:
+            from repro.serving.mesh import MeshSpec
+            object.__setattr__(self, "mesh", MeshSpec.parse(self.mesh))
 
     @property
     def needs_worker(self) -> bool:
@@ -280,6 +292,13 @@ class MonitorSession:
             return
         if self._state == "closed":
             raise RuntimeError("session is closed")
+        if self.config.mesh is not None:
+            # transparently shard at open (BEFORE any worker is built:
+            # the worker must adopt the sharded cache + re-jitted
+            # catch-up).  Idempotent when the engine already carries the
+            # same mesh; loud on a mismatch.
+            from repro.serving.mesh import ensure_sharded
+            ensure_sharded(self._engine, self.config.mesh)
         if self.config.needs_worker:
             spec = self.config.transport
             self._engine._start_async(

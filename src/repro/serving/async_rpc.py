@@ -68,6 +68,17 @@ the duration of the async session and the engine re-adopts it once when
 the ``MonitorSession`` closes (after a full drain), which keeps
 cross-thread ownership trivial.  See ``docs/protocol.md`` for the full
 timeline diagrams.
+
+MESH-SHARDED SESSIONS (``SessionConfig(mesh=...)``, serving/mesh.py):
+the session shards the engine BEFORE the worker is built, so every local
+transport adopts the batch-sharded server cache and the re-jitted
+catch-up (whose in/out shardings are compiled in) — requests chain
+through sharded buffers exactly as through unsharded ones, and slot
+churn's row resets on the worker-owned cache are spec-aware
+(placement-preserving).  The ``wire`` transport is orthogonal: the
+client's mesh shards its edge, while the server process shards its own
+super-batch via ``CorrectionServer(mesh=...)``; only protocol bytes
+cross the boundary either way.
 """
 from __future__ import annotations
 

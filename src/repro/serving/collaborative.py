@@ -75,6 +75,14 @@ here, dispatched to by ``MonitorSession``):
     communication accounting derived from the trigger trace.  It does not
     mutate the engine's protocol state, and membership is fixed (scan
     sessions reject attach/detach).
+
+All three paths run unchanged on a MESH-SHARDED engine
+(``serving/mesh.py``, ``SessionConfig(mesh="data:8")`` or
+``CollaborativeEngine(..., mesh=...)``): params replicate, every
+per-stream buffer shards over the mesh data axis, and because the
+protocol is elementwise across the batch the sharded engine is per-row
+BITWISE identical to the unsharded one, with the monitor path
+HLO-asserted collective-free (docs/sharding.md).
 """
 from __future__ import annotations
 
@@ -104,7 +112,7 @@ class CollaborativeEngine:
 
     def __init__(self, params: Dict, cfg: ArchConfig, batch: int, max_len: int,
                  *, capacity: Optional[int] = None,
-                 monitor_n: Optional[int] = None):
+                 monitor_n: Optional[int] = None, mesh=None):
         self.cfg, self.m = cfg, cfg.monitor
         self.params = params
         self.batch, self.max_len = batch, max_len
@@ -132,6 +140,15 @@ class CollaborativeEngine:
         self._record_at = jax.jit(self._record_at_impl)
         self._catchup = jax.jit(self._catchup_impl)
         self._scan = jax.jit(self._scan_impl)
+        # mesh-sharded serving (serving/mesh.py): params replicated,
+        # per-stream state batch-sharded over the mesh data axis, hot
+        # paths re-jitted with explicit shardings.  ``mesh``: a MeshSpec
+        # or "data:8"-style string; per-row numerics are unchanged.
+        self.mesh = None
+        self.mesh_spec = None
+        if mesh is not None:
+            from repro.serving.mesh import shard_engine
+            shard_engine(self, mesh)
 
     # -- session factory -----------------------------------------------------
     def session(self, config=None, *, streams=None, worker=None):
@@ -143,6 +160,15 @@ class CollaborativeEngine:
         return MonitorSession(self, config, streams=streams, worker=worker)
 
     # -- heads ---------------------------------------------------------------
+    # Both heads end in a matvec over the feature axis.  They are written
+    # as elementwise-mul + single-axis reduce rather than ``x @ w``: XLA's
+    # CPU matvec lowering is M-dependent at ~1 ulp (a (2,64)@(64,1) dot
+    # rounds differently from a (16,64)@(64,1) dot), so the dot form
+    # would break per-row bitwise identity between a mesh-sharded engine
+    # (each device holds B/N rows) and the unsharded one, and between the
+    # scan path's capacity-compacted corrector buffer and the online
+    # path.  The reduce form is row-local by construction (asserted
+    # sharded-vs-unsharded in tests/test_mesh.py).
     def _u_head_impl(self, params, hidden_t):
         hd = params["u_head"]
         feats = jnp.tanh(linear(hd["w_feat"], hidden_t.astype(jnp.float32)))
@@ -151,23 +177,31 @@ class CollaborativeEngine:
         # training u)
         mask = (jnp.arange(feats.shape[-1]) < self.monitor_n).astype(jnp.float32)
         t = jax.nn.softplus(hd["raw_t"])
-        return feats @ (hd["a"] * mask) + t
+        return jnp.sum(feats * (hd["a"] * mask), axis=-1) + t
 
     def _v_head_impl(self, params, hidden_t):
-        return linear(params["v_head"], hidden_t.astype(jnp.float32))[..., 0]
+        hd = params["v_head"]
+        h = hidden_t.astype(jnp.float32)
+        return jnp.sum(h * hd["w"][:, 0], axis=-1) + hd["b"][0]
 
     # -- online (lazy, per-element) path -------------------------------------
     def _record_at_impl(self, history, tokens_t, pos, active):
         """Write tokens_t[i] into history[i, pos[i]] where active (inactive
         slots bit-untouched).  Integer writes: bit-identical to the old
-        uniform dynamic_update_slice when pos is uniform."""
-        B = history.shape[0]
+        uniform dynamic_update_slice when pos is uniform.
+
+        Expressed as a one-hot time select rather than a scatter: the
+        update is elementwise over the batch, so a batch-sharded history
+        (serving/mesh.py) lowers collective-free — XLA's scatter
+        partitioner cannot see that ``[arange(B), idx]`` is row-local
+        and would all-gather the indices (HLO-asserted in test_mesh)."""
+        B, L = history.shape[0], history.shape[1]
         idx = jnp.clip(pos, 0, self.max_len - 1)
-        cur = jnp.take_along_axis(
-            history, idx.reshape((B,) + (1,) * (history.ndim - 1)), axis=1)[:, 0]
-        amask = active.reshape((B,) + (1,) * (cur.ndim - 1))
-        new = jnp.where(amask, tokens_t.astype(history.dtype), cur)
-        return history.at[jnp.arange(B), idx].set(new)
+        onehot = jnp.arange(L, dtype=idx.dtype) == idx[:, None]      # (B, L)
+        sel = (onehot & active[:, None]).reshape(
+            (B, L) + (1,) * (history.ndim - 2))
+        val = tokens_t.astype(history.dtype)[:, None]                # (B, 1[,K])
+        return jnp.where(sel, val, history)
 
     def _catchup_impl(self, params, cache, history, server_pos, t, triggered, u):
         """Masked per-element server catch-up + fused correction.
@@ -438,12 +472,18 @@ class CollaborativeEngine:
         elif self._dispatcher is not None:
             # the worker owns the server cache for the session; after the
             # drain no compute is in flight, so the functional row reset
-            # is race-free on every local transport
+            # is race-free on every local transport (spec-aware: a
+            # sharded cache keeps its placement through the reset)
             self._worker.cache = zero_cache_rows(
-                self._worker.cache, self.server.axes, jnp.asarray(rows))
+                self._worker.cache, self.server.axes, jnp.asarray(rows),
+                shardings=self.server._cache_shardings)
         else:
             self.server.zero_rows(rows)
         self._history = self._history.at[slot].set(0)
+        if getattr(self, "_history_sharding", None) is not None:
+            # eager row scatter may lose the committed placement
+            self._history = jax.device_put(self._history,
+                                           self._history_sharding)
         self.server_pos[slot] = 0
         self.edge_pos[slot] = 0
         if self._dispatcher is not None:

@@ -55,7 +55,7 @@ def cache_batch_axes(cfg: ArchConfig, batch: int, max_len: int):
     return jax.tree.map(find, a, b)
 
 
-def zero_cache_rows(cache, axes, rows: jnp.ndarray):
+def zero_cache_rows(cache, axes, rows: jnp.ndarray, *, shardings=None):
     """Zero the selected batch rows of every cache leaf.
 
     ``rows``: (B,) bool mask along each leaf's discovered batch axis
@@ -64,6 +64,14 @@ def zero_cache_rows(cache, axes, rows: jnp.ndarray):
     attach): the new tenant must see bit-cold cache rows, exactly as if
     the cache had just been built, while co-resident rows stay
     bit-untouched.
+
+    ``shardings``: a NamedSharding tree matching ``cache`` — SPEC-AWARE
+    reset for mesh-sharded caches (``serving/mesh.py``).  The select is
+    elementwise, so each device only ever rewrites its own rows; the
+    explicit re-placement pins the result to the input shardings so a
+    reset can never silently gather a super-batch cache onto one device
+    (the eager-mode default when sharding propagation loses the
+    committed placement).  Asserted in tests/test_mesh.py.
     """
     rows = jnp.asarray(rows, bool)
 
@@ -72,7 +80,10 @@ def zero_cache_rows(cache, axes, rows: jnp.ndarray):
         shape[ax] = rows.shape[0]
         return jnp.where(jnp.reshape(rows, shape), jnp.zeros((), a.dtype), a)
 
-    return jax.tree.map(z, cache, axes)
+    out = jax.tree.map(z, cache, axes)
+    if shardings is not None:
+        out = jax.tree.map(jax.device_put, out, shardings)
+    return out
 
 
 def make_step_at(cfg: ArchConfig, axes, *, with_logits: bool = True):
@@ -150,6 +161,9 @@ class ServeEngine:
         self._prefill = jax.jit(self._prefill_impl)
         self._step_at = {}  # built lazily (per-element decode), per variant
         self._axes = None   # cache_batch_axes, built lazily
+        # NamedSharding tree for the cache when the engine is mesh-sharded
+        # (set by serving.mesh.shard_engine); row resets preserve it
+        self._cache_shardings = None
 
     @property
     def axes(self):
@@ -232,9 +246,11 @@ class ServeEngine:
     def zero_rows(self, rows) -> None:
         """Reset the selected batch rows of the cache to bit-cold zeros
         (``rows``: (B,) bool).  Slot-pool hygiene: a re-leased slot must
-        start exactly as a fresh engine would."""
+        start exactly as a fresh engine would.  On a mesh-sharded engine
+        the reset preserves the cache placement (spec-aware)."""
         self.cache = zero_cache_rows(self.cache, self.axes,
-                                     jnp.asarray(rows, bool))
+                                     jnp.asarray(rows, bool),
+                                     shardings=self._cache_shardings)
 
     def get_step_at(self, with_logits: bool = True) -> Callable:
         """Pure per-element decode fn (params, cache, tokens, pos(B,),

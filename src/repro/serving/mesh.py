@@ -1,0 +1,337 @@
+"""Mesh-sharded serving: data-parallel super-batch state + a
+collective-free monitor path at batch 1k+.
+
+The paper's deployment is a fleet of edge monitors behind ONE heavy
+server-side corrector.  At production scale that corrector serves
+thousands of concurrent streams, and the per-stream server state — the
+KV/SSM catch-up cache, the token-history mirror — no longer fits one
+device.  This module shards a ``CollaborativeEngine`` (and, through it,
+the standalone ``CorrectionServer``) across a host/device mesh:
+
+  * **params** — replicated.  Both towers are small relative to the
+    super-batch state and every device decodes its own rows; replication
+    keeps the per-row math bit-identical to the unsharded engine.
+  * **per-stream state** — batch-axis sharded over the mesh ``data``
+    axis: the edge + server caches (``distributed.sharding.cache_specs``
+    finds each leaf's batch axis), the on-device token history, and
+    every (B,) protocol vector crossing a jit boundary (positions,
+    trigger masks, u/v scores).
+
+The per-stream protocol is ELEMENTWISE across the batch: stream i's
+decode, trigger decision, backlog replay, and cache rows never read
+stream j's.  Sharding the batch axis therefore cannot introduce any
+cross-device communication on the monitor path, and this module makes
+that a checked guarantee rather than a hope: ``shard_engine`` compiles
+the edge-path kernels (masked decode, u head, history record) with
+explicit ``in_shardings``/``out_shardings`` and ASSERTS that the
+resulting HLO contains **zero collective ops** (``edge_hlo`` /
+``assert_collective_free``).  The server catch-up replay is re-jitted
+with the same placements; its only cross-device traffic is the scalar
+``n_rounds`` reduction that sizes the replay loop.
+
+Per-row bitwise identity to the unsharded engine (u / trigger / fhat /
+server cache / comms) is asserted in ``tests/test_mesh.py`` on an
+8-virtual-device host mesh — sharding is a pure placement change, not a
+numerics change.
+
+Entry points
+------------
+
+* ``MeshSpec.parse("data:8")`` — the one mesh description every surface
+  shares (``SessionConfig(mesh=...)``, ``CollaborativeEngine(mesh=...)``,
+  ``CorrectionServer(mesh=...)``, ``--mesh`` on the launchers).
+* ``shard_engine(engine, spec)`` — place + re-jit an engine in place
+  (idempotent for the same spec; a ``MonitorSession`` whose config
+  carries a mesh calls this transparently at open).
+* ``edge_hlo(engine)`` / ``assert_collective_free(...)`` — the compiled
+  monitor-path HLO and the zero-collectives check.
+* ``bytes_per_device(tree)`` — per-device bytes of a sharded pytree
+  (the bench's ``cache_bytes_per_device`` column).
+
+Virtual-device runs (tests, CI ``shard-smoke``, the bench sweep) pin
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before importing
+jax.  See docs/sharding.md for the placement table and the
+collective-free argument.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+_AXIS_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+# HLO op mnemonics that imply cross-device communication.  ``partition-id``
+# and ``replica-id`` are cheap but flag anything partition-dependent; the
+# monitor path must contain none of these.
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute", "collective-broadcast",
+                  "ragged-all-to-all")
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """A parsed, validated mesh description — ``"data:8"`` style.
+
+    ``axes`` is an ordered tuple of (name, size) pairs.  Serving shards
+    per-stream state over the ``data`` axis (a ``pod`` axis, when
+    present, widens it — same convention as
+    ``distributed.sharding.data_axes``); any other axis is legal in the
+    spec but idle on the serving path (params replicate).
+    """
+
+    axes: Tuple[Tuple[str, int], ...] = (("data", 1),)
+
+    def __post_init__(self):
+        if not self.axes:
+            raise ValueError("empty mesh spec")
+        names = [n for n, _ in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis in {names}")
+        for name, size in self.axes:
+            if not _AXIS_RE.match(name):
+                raise ValueError(f"bad mesh axis name {name!r}")
+            if not isinstance(size, int) or size < 1:
+                raise ValueError(
+                    f"mesh axis {name!r} needs a positive integer size, "
+                    f"got {size!r}")
+        if "data" not in names:
+            raise ValueError(
+                "serving meshes shard per-stream state over a 'data' axis: "
+                f"spec {self} has none (e.g. use 'data:8')")
+
+    @classmethod
+    def parse(cls, spec: Union[str, "MeshSpec"]) -> "MeshSpec":
+        """``"data:8"`` / ``"pod:2,data:4"`` -> MeshSpec; a MeshSpec
+        passes through unchanged.  Round-trips: ``MeshSpec.parse(str(s))
+        == s``."""
+        if isinstance(spec, cls):
+            return spec
+        axes = []
+        for part in str(spec).split(","):
+            name, sep, size = part.partition(":")
+            if not sep:
+                raise ValueError(
+                    f"mesh axis {part!r} must be 'name:size' (e.g. 'data:8')")
+            try:
+                n = int(size)
+            except ValueError:
+                raise ValueError(f"mesh axis size {size!r} is not an integer")
+            axes.append((name.strip(), n))
+        return cls(tuple(axes))
+
+    def __str__(self) -> str:
+        return ",".join(f"{n}:{s}" for n, s in self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for _, s in self.axes:
+            n *= s
+        return n
+
+    @property
+    def data_size(self) -> int:
+        """Ways the batch axis splits (product of pod+data sizes)."""
+        n = 1
+        for name, s in self.axes:
+            if name in ("pod", "data"):
+                n *= s
+        return n
+
+    def build(self) -> Mesh:
+        """Materialise the mesh over the first ``n_devices`` local
+        devices.  Raises with an ``XLA_FLAGS`` hint when the host has
+        too few (CPU hosts expose one device unless the platform device
+        count is forced)."""
+        have = jax.device_count()
+        if have < self.n_devices:
+            raise ValueError(
+                f"mesh {self} needs {self.n_devices} devices, host has "
+                f"{have}: set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={self.n_devices} before importing jax "
+                "(virtual host mesh), or run on a multi-device platform")
+        devs = np.asarray(jax.devices()[:self.n_devices]).reshape(
+            tuple(s for _, s in self.axes))
+        return Mesh(devs, tuple(n for n, _ in self.axes))
+
+
+def collective_ops(hlo_text: str) -> Tuple[str, ...]:
+    """The collective-op lines appearing in compiled HLO text."""
+    hits = []
+    for line in hlo_text.splitlines():
+        if any(op in line for op in COLLECTIVE_OPS):
+            hits.append(line.strip()[:160])
+    return tuple(hits)
+
+
+def assert_collective_free(hlo_text: str, what: str = "edge step") -> None:
+    """The paper's device-locality guarantee, checked on compiled HLO:
+    the monitor path must not communicate across devices."""
+    hits = collective_ops(hlo_text)
+    if hits:
+        raise AssertionError(
+            f"{what} HLO contains cross-device collectives (the monitor "
+            f"path must be collective-free):\n  " + "\n  ".join(hits))
+
+
+def bytes_per_device(tree: Any) -> int:
+    """Per-device bytes of a (possibly sharded) array pytree — each
+    leaf's addressable shard size, via ``sharding.shard_shape``."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = leaf.sharding.shard_shape(leaf.shape) \
+            if hasattr(leaf, "sharding") else leaf.shape
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Engine sharding
+# ---------------------------------------------------------------------------
+
+
+def _shapes(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def edge_hlo(engine) -> Dict[str, str]:
+    """Compiled HLO of the three monitor-path kernels of a SHARDED
+    engine: the dense masked edge decode, the u head, and the per-slot
+    history record.  These are exactly the jits ``_monitor_prologue``
+    drives every step — together they ARE the edge/monitor path."""
+    if getattr(engine, "mesh_spec", None) is None:
+        raise ValueError("engine is not mesh-sharded (use shard_engine)")
+    B = engine.batch
+    tok_tail = tuple(engine._history.shape[2:])
+    tokens = jax.ShapeDtypeStruct((B,) + tok_tail, jnp.int32)
+    pos0 = jax.ShapeDtypeStruct((), jnp.int32)
+    posv = jax.ShapeDtypeStruct((B,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    hidden = jax.ShapeDtypeStruct((B, engine.edge.cfg.d_model), jnp.float32)
+    return {
+        "decode_masked": engine.edge._step_masked.lower(
+            _shapes(engine.edge.params), _shapes(engine.edge.cache),
+            tokens, pos0, mask).compile().as_text(),
+        "u_head": engine._u_head.lower(
+            _shapes(engine.params), hidden).compile().as_text(),
+        "record_at": engine._record_at.lower(
+            _shapes(engine._history), tokens, posv, mask
+        ).compile().as_text(),
+    }
+
+
+def shard_engine(engine, spec: Union[str, MeshSpec], *,
+                 check_collectives: bool = True):
+    """Shard a ``CollaborativeEngine`` over ``spec`` IN PLACE and return
+    it: replicate params, split every per-stream buffer (edge + server
+    cache, token history) over the mesh ``data`` axis, and re-jit the
+    hot paths — masked edge decode, u/v heads, history record, masked
+    catch-up replay, the offline scan — with explicit
+    ``in_shardings``/``out_shardings`` so placements are compiled in,
+    not re-derived per call.
+
+    Values are untouched (``device_put`` only moves bytes): the sharded
+    engine is per-row bit-identical to the unsharded one.  Idempotent
+    for an equal spec; a different spec, or an engine with an open async
+    session (its worker owns the server cache), is refused.
+
+    ``check_collectives`` compiles the monitor-path kernels eagerly and
+    asserts their HLO is collective-free (the paper's device-locality
+    requirement, now enforced at shard time).
+    """
+    spec = MeshSpec.parse(spec)
+    current = getattr(engine, "mesh_spec", None)
+    if current == spec:
+        return engine
+    if current is not None:
+        raise ValueError(
+            f"engine is already sharded over {current}; re-sharding over "
+            f"{spec} mid-life is not supported — build a fresh engine")
+    if engine._dispatcher is not None:
+        raise RuntimeError(
+            "cannot shard an engine with an open async session (the "
+            "worker owns the server cache); close the session first")
+    if engine.batch % spec.data_size != 0:
+        raise ValueError(
+            f"batch {engine.batch} not divisible by the mesh data size "
+            f"{spec.data_size} ({spec})")
+
+    mesh = spec.build()
+    daxes = shd.data_axes(mesh)
+    dname = daxes if len(daxes) > 1 else daxes[0]
+    repl = NamedSharding(mesh, P())
+    d1 = NamedSharding(mesh, P(dname))  # batch-leading, rest unsharded
+
+    # -- placement (pure data movement: values are untouched) ---------------
+    engine.params = jax.device_put(engine.params, repl)
+    engine.edge.params = engine.params["edge"]
+    engine.server.params = engine.params["server"]
+    for se in (engine.edge, engine.server):
+        csh = shd.cache_shardings(se.cache, mesh, engine.batch,
+                                  use_model=False)
+        se.cache = jax.device_put(se.cache, csh)
+        se._cache_shardings = csh
+    engine._history = jax.device_put(engine._history, d1)
+    engine._history_sharding = d1
+
+    # -- re-jit the hot paths with compiled-in placements -------------------
+    ecsh = engine.edge._cache_shardings
+    scsh = engine.server._cache_shardings
+    engine.edge._step_masked = jax.jit(
+        engine.edge._step_masked_impl,
+        in_shardings=(repl, ecsh, d1, repl, d1),
+        out_shardings=(d1, d1, ecsh))
+    engine.server._step_masked = jax.jit(
+        engine.server._step_masked_impl,
+        in_shardings=(repl, scsh, d1, repl, d1),
+        out_shardings=(d1, d1, scsh))
+    engine._record_at = jax.jit(
+        engine._record_at_impl,
+        in_shardings=(d1, d1, d1, d1), out_shardings=d1)
+    engine._u_head = jax.jit(
+        engine._u_head_impl, in_shardings=(repl, d1), out_shardings=d1)
+    # _v_head is NOT constrained: besides the (B,) batch inside the
+    # catch-up (where the outer jit's shardings govern the inlined
+    # call), the scan path applies it to the (capacity, d) compacted
+    # corrector buffer, whose leading dim need not divide the mesh.
+    # Its row-local reduce form keeps per-row bits placement-independent
+    # either way.
+    # catch-up: t may be a scalar (uniform pool) or (B,) vector (ragged
+    # pool / server coalescing) — P() replicates either rank, and the
+    # round mask stays elementwise against the sharded positions
+    engine._catchup = jax.jit(
+        engine._catchup_impl,
+        in_shardings=(repl, scsh, d1, d1, repl, d1, d1),
+        out_shardings=(scsh, d1, d1))
+    engine._scan = jax.jit(
+        engine._scan_impl,
+        in_shardings=(repl, d1), out_shardings=(d1, d1, d1, d1))
+
+    engine.mesh = mesh
+    engine.mesh_spec = spec
+
+    if check_collectives:
+        for name, txt in edge_hlo(engine).items():
+            assert_collective_free(txt, f"monitor path [{name}]")
+    return engine
+
+
+def ensure_sharded(engine, spec: Union[str, MeshSpec, None]):
+    """Session-open hook: no-op for ``spec=None`` (whatever the engine
+    already is), otherwise ``shard_engine`` (idempotent for an equal
+    spec, loud on a mismatch)."""
+    if spec is None:
+        return engine
+    return shard_engine(engine, spec)

@@ -99,7 +99,7 @@ class CorrectionServer:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 16,
                  max_len: int = 128, uds: Optional[str] = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 coalesce: bool = True):
+                 coalesce: bool = True, mesh: Optional[str] = None):
         self.cfg, self.m = cfg, cfg.monitor
         self.slots, self.max_len = int(slots), int(max_len)
         self.coalesce = bool(coalesce)   # server-wide kill switch
@@ -107,10 +107,16 @@ class CorrectionServer:
         # CollaborativeEngine at batch=slots supplies the compiled
         # _catchup_impl and the super-batch server cache.  (Its edge tower
         # and comms meter are unused here — the edge lives in the clients.)
+        # ``mesh`` ("data:8"-style, serving/mesh.py) shards that
+        # super-batch over a device mesh: the coalesced replay runs with
+        # each device holding slots/N cache rows, and leases/resets stay
+        # row-local (the per-stream protocol is elementwise).
         eng = CollaborativeEngine(params, cfg, batch=self.slots,
-                                  max_len=self.max_len)
+                                  max_len=self.max_len, mesh=mesh)
         self._eng = eng
+        self.mesh_spec = eng.mesh_spec
         self._cache = eng.server.cache
+        self._cache_shardings = eng.server._cache_shardings
         self._axes = cache_batch_axes(cfg, self.slots, self.max_len)
         tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
         self.tok_tail: Tuple[int, ...] = tok_tail
@@ -131,7 +137,7 @@ class CorrectionServer:
         self._pending: List[Tuple[Session, wire.WireRequest]] = []
         self.stats = {"requests": 0, "replays": 0, "coalesced": 0,
                       "sessions": 0, "bytes_rx": 0, "bytes_tx": 0,
-                      "attaches": 0, "detaches": 0}
+                      "attaches": 0, "detaches": 0, "defrags": 0}
 
         # -- listener ---------------------------------------------------------
         self.uds = uds
@@ -175,12 +181,62 @@ class CorrectionServer:
     def _reset_rows(self, lo: int, hi: int) -> None:
         """Zero a leased range: a new session (or a re-leased slot — the
         ATTACH churn frame) must see cold cache rows even if a previous
-        tenant used them."""
+        tenant used them.  Spec-aware: on a mesh-sharded super-batch the
+        reset preserves the cache placement (each device rewrites only
+        its own rows — no gather-to-host)."""
         rows = np.zeros(self.slots, bool)
         rows[lo:hi] = True
         self._cache = zero_cache_rows(self._cache, self._axes,
-                                      jnp.asarray(rows))
+                                      jnp.asarray(rows),
+                                      shardings=self._cache_shardings)
         self._history[lo:hi] = 0
+
+    # -- lease defrag --------------------------------------------------------
+    def fragmentation(self) -> float:
+        """Lease-fragmentation gauge in [0, 1): the fraction of free
+        super-batch rows NOT in the largest free extent.  0 when the
+        free space is one contiguous block (or there is none); reported
+        in the SIGTERM stats dump of ``launch/server.py``."""
+        free = sum(h - l for l, h in self._free)
+        if free == 0:
+            return 0.0
+        return 1.0 - max(h - l for l, h in self._free) / free
+
+    def _defrag(self) -> None:
+        """Compact live leases to the low end of the super-batch so the
+        free rows form ONE contiguous tail (a long-lived multi-tenant
+        server must not refuse a batch-N HELLO while N rows sit free in
+        scattered holes).  Cache rows and the history mirror move WITH
+        their sessions — a client's rows are bit-identical before and
+        after, only their physical position changes, and clients address
+        slots relative to ``sess.lo`` so nothing crosses the wire.
+        Queued requests stay valid: the replay reads ``sess.lo`` at
+        replay time, after the rows have moved."""
+        live = sorted((s for s in self._sessions.values() if s.lo >= 0),
+                      key=lambda s: s.lo)
+        if not any(s.lo != lo for s, lo in
+                   zip(live, np.cumsum([0] + [s.batch for s in live]))):
+            return  # already compact
+        order: List[int] = []
+        for s in live:
+            order.extend(range(s.lo, s.lo + s.batch))
+        taken = set(order)
+        perm = np.asarray(order + [r for r in range(self.slots)
+                                   if r not in taken])
+        permj = jnp.asarray(perm)
+        self._cache = jax.tree.map(
+            lambda a, ax: jnp.take(a, permj, axis=ax), self._cache,
+            self._axes)
+        if self._cache_shardings is not None:
+            self._cache = jax.tree.map(jax.device_put, self._cache,
+                                       self._cache_shardings)
+        self._history = self._history[perm]
+        lo = 0
+        for s in live:
+            s.lo = lo
+            lo += s.batch
+        self._free = [(lo, self.slots)] if lo < self.slots else []
+        self.stats["defrags"] += 1
 
     # -- socket plumbing -----------------------------------------------------
     def _send(self, sess: Session, data: bytes) -> None:
@@ -214,10 +270,25 @@ class CorrectionServer:
             sess.conn.close()
         except OSError:
             pass
-        if sess.lo >= 0:
+        released = sess.lo >= 0
+        if released:
             self._release(sess.lo, sess.batch)
+            # _drop can re-enter for the same session (the BYE handler
+            # flushes then drops, and the flush itself drops on a broken
+            # pipe when the peer closed first): releasing twice would
+            # duplicate free ranges and later double-lease rows to two
+            # tenants — mark the lease gone
+            sess.lo = -1
         self._sessions.pop(sess.conn, None)
         self._pending = [(s, r) for s, r in self._pending if s is not sess]
+        # BYE/disconnect defrag: keep the freed rows one contiguous tail.
+        # Deferred while catch-up requests are queued — the compaction
+        # permutes the whole super-batch cache on the reactor thread, and
+        # co-resident clients' replays must not stall behind it (a
+        # fragmented map is still compacted lazily at the next HELLO that
+        # needs it, see ``_handle``)
+        if released and len(self._free) > 1 and not self._pending:
+            self._defrag()
 
     def _accept(self) -> None:
         while True:
@@ -276,6 +347,12 @@ class CorrectionServer:
                     f"token tail {msg.tok_tail} != server {self.tok_tail}"))
                 return
             lo = self._alloc(msg.batch)
+            if lo < 0 and len(self._free) > 1 \
+                    and sum(h - l for l, h in self._free) >= msg.batch:
+                # enough rows free in total, just fragmented: compact and
+                # retry — a HELLO that fits is never refused for holes
+                self._defrag()
+                lo = self._alloc(msg.batch)
             if lo < 0:
                 self._send(sess, wire.encode_error(
                     f"server full: {msg.batch} slots requested, "
