@@ -344,10 +344,14 @@ def _mesh_child_row(devices: int, batch: int, steps: int = 20) -> str:
     tps = batch * (steps - warm) / dt
     cache_bytes = (mesh_mod.bytes_per_device(eng.server.cache)
                    + mesh_mod.bytes_per_device(eng.edge.cache))
+    # note: on a virtual-device CPU host the sweep measures MEMORY
+    # scaling (per-device cache bytes drop 1/N), not throughput — the
+    # caveat travels with the row instead of living only in ROADMAP prose
     return (f"serving/mesh_b{batch}_d{devices},"
             f"{dt / (steps - warm) * 1e6:.1f},"
             f"devices={devices};batch={batch};tokens_per_sec={tps:.0f};"
-            f"cache_bytes_per_device={cache_bytes}")
+            f"cache_bytes_per_device={cache_bytes};"
+            f"note=cache-bytes-motivated")
 
 
 def run_mesh_sweep(csv: List[str], max_devices: int) -> None:

@@ -1,0 +1,33 @@
+"""Compile-time invariant verification for the serving stack.
+
+The paper's two load-bearing guarantees are *structural*, so they are
+checked on compiled artifacts rather than sampled outputs:
+
+* ``analysis.signs`` — abstract interpretation over closed jaxprs with a
+  sign/interval domain.  Proves the corrector ``s*sigma(v)`` is
+  elementwise nonnegative and hence ``fhat <= u`` (the edge monitor is a
+  safe upper bound) for every registered arch and every ``sigma_kind``,
+  or emits the offending primitive chain as a counterexample.
+* ``analysis.hlo`` — a parsed per-op rule engine over compiled HLO text:
+  ``collective-free``, ``no-host-transfer``, ``no-dynamic-shapes``, each
+  with an explicit allowlist.  ``serving/mesh.py`` delegates its
+  zero-collectives assertion here; the rules also run unsharded.
+* ``analysis.recompile`` — a compile-cache tracker ``MonitorSession``
+  can arm to assert each jitted path compiles exactly once across a
+  churn episode (retrace blowups fail tests instead of costing 10x).
+* ``analysis.rules`` — the rule registry + report used by
+  ``tools/check_static.py`` (CI's ``static-analysis`` job), including a
+  mutation self-test that seeds violations and asserts each rule fires.
+
+See docs/analysis.md for the rule table and the sign-domain semantics.
+"""
+from repro.analysis.signs import (  # noqa: F401
+    Interval, SignAnalysis, SignCertificate, analyze_jaxpr,
+    verify_catchup, verify_forward,
+)
+from repro.analysis.hlo import (  # noqa: F401
+    HloInstruction, assert_collective_free, collective_instructions,
+    dynamic_shape_instructions, host_transfer_instructions,
+    monitor_path_hlo, parse_hlo,
+)
+from repro.analysis.recompile import RecompileError, RecompileGuard  # noqa: F401

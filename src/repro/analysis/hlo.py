@@ -1,0 +1,243 @@
+"""Parsed per-op rule engine over compiled HLO text.
+
+Replaces the old substring scan (``serving/mesh.py``): matching opcodes
+instead of raw lines means a benign op whose *metadata* mentions
+``all_gather_like`` (named scopes, fusion names, source paths) can no
+longer trip the collective-free check, while a real ``all-reduce``
+buried inside a fusion body still does — every instruction line of
+every computation in the module is parsed, fused bodies included.
+
+Rules (each with an explicit allowlist):
+
+* ``collective-free`` — no cross-device communication opcodes.  The
+  paper's device-locality guarantee: the monitor path must decide
+  without the server, hence without the mesh.
+* ``no-host-transfer`` — no infeed/outfeed/send/recv, and no
+  ``custom-call`` whose target is not allowlisted (host callbacks like
+  ``xla_python_cpu_callback`` hide behind custom-call; the allowlist
+  names the benign compute targets, e.g. ``TopK``).
+* ``no-dynamic-shapes`` — no bounded-dynamic dimensions (``f32[<=8]``):
+  the serving jits are shape-static by design and a dynamic dim means a
+  shape-polymorphic lowering snuck in.
+
+``monitor_path_hlo(engine)`` compiles the monitor-path kernels of a
+``CollaborativeEngine`` — masked edge decode, u head, history record,
+and the server catch-up — sharded when a mesh is attached, UNSHARDED
+otherwise, so the edge rules run on single-device engines too (the old
+check only existed after ``shard_engine``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# opcodes that imply cross-device communication (async -start/-done
+# halves included: a started collective is still a collective)
+COLLECTIVE_OPCODES = frozenset({
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+    "all-reduce-start", "all-reduce-done", "all-gather-start",
+    "all-gather-done", "collective-permute-start",
+    "collective-permute-done", "all-to-all-start", "all-to-all-done",
+})
+
+# opcodes that move data between host and device
+HOST_TRANSFER_OPCODES = frozenset({
+    "infeed", "outfeed", "send", "recv", "send-done", "recv-done",
+})
+
+# custom-call targets that are pure device compute, not host transfers.
+# Anything NOT listed fails ``no-host-transfer`` — deny by default, so
+# new callback flavours cannot slip through unreviewed.
+DEFAULT_CUSTOM_CALL_ALLOW = frozenset({
+    "TopK",                     # lax.top_k on CPU
+    "Sharding",                 # SPMD sharding annotations
+    "SPMDFullToShardShape", "SPMDShardToFullShape",  # shard_map markers
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class HloInstruction:
+    """One parsed HLO instruction line."""
+
+    name: str
+    opcode: str
+    shape: str
+    line: str                      # stripped source line
+    custom_call_target: Optional[str] = None
+    metadata_op_name: Optional[str] = None
+
+    def brief(self) -> str:
+        return self.line if len(self.line) <= 160 else self.line[:157] + "..."
+
+
+# `%name = shape opcode(...)`; shape is a (possibly tuple of)
+# dtype[dims]{layout} — dims may be bounded-dynamic (`<=8`)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^=]*?\)|[A-Za-z0-9_]+(?:\[[^\]]*\])?(?:\{[^}]*\})?)\s+"
+    r"(?P<opcode>[a-z][a-z0-9\-]*)\(")
+_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+_METADATA_RE = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+
+
+def parse_hlo(hlo_text: str) -> List[HloInstruction]:
+    """Every instruction of every computation in an HLO module dump
+    (entry, fusions, called computations, while bodies...)."""
+    out = []
+    for raw in hlo_text.splitlines():
+        m = _INSTR_RE.match(raw)
+        if not m:
+            continue
+        tgt = _TARGET_RE.search(raw)
+        md = _METADATA_RE.search(raw)
+        out.append(HloInstruction(
+            name=m.group("name"), opcode=m.group("opcode"),
+            shape=m.group("shape"), line=raw.strip(),
+            custom_call_target=tgt.group(1) if tgt else None,
+            metadata_op_name=md.group(1) if md else None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def collective_instructions(hlo_text: str,
+                            allow: Iterable[str] = ()) -> List[HloInstruction]:
+    """Instructions whose OPCODE is a collective (metadata and fusion
+    names cannot trip this).  ``allow``: instruction names to exempt."""
+    allowed = frozenset(allow)
+    return [i for i in parse_hlo(hlo_text)
+            if i.opcode in COLLECTIVE_OPCODES and i.name not in allowed]
+
+
+def host_transfer_instructions(
+        hlo_text: str,
+        allow_custom_calls: Iterable[str] = DEFAULT_CUSTOM_CALL_ALLOW,
+) -> List[HloInstruction]:
+    """Host-transfer opcodes plus any custom-call whose target is not in
+    the allowlist (host callbacks are custom-calls)."""
+    allowed = frozenset(allow_custom_calls)
+    hits = []
+    for i in parse_hlo(hlo_text):
+        if i.opcode in HOST_TRANSFER_OPCODES:
+            hits.append(i)
+        elif i.opcode == "custom-call" and \
+                (i.custom_call_target or "") not in allowed:
+            hits.append(i)
+    return hits
+
+
+_DYNAMIC_DIM_RE = re.compile(r"\[[^\]]*<=")
+
+
+def dynamic_shape_instructions(hlo_text: str,
+                               allow: Iterable[str] = ()) -> List[HloInstruction]:
+    """Instructions with bounded-dynamic dimensions (``f32[<=8]``)."""
+    allowed = frozenset(allow)
+    return [i for i in parse_hlo(hlo_text)
+            if _DYNAMIC_DIM_RE.search(i.shape) and i.name not in allowed]
+
+
+def assert_collective_free(hlo_text: str, what: str = "edge step",
+                           allow: Iterable[str] = ()) -> None:
+    """The paper's device-locality guarantee, checked per-op on compiled
+    HLO: the monitor path must not communicate across devices."""
+    hits = collective_instructions(hlo_text, allow)
+    if hits:
+        raise AssertionError(
+            f"{what} HLO contains cross-device collectives (the monitor "
+            f"path must be collective-free):\n  "
+            + "\n  ".join(h.brief() for h in hits))
+
+
+def assert_no_host_transfer(
+        hlo_text: str, what: str = "edge step",
+        allow_custom_calls: Iterable[str] = DEFAULT_CUSTOM_CALL_ALLOW) -> None:
+    hits = host_transfer_instructions(hlo_text, allow_custom_calls)
+    if hits:
+        raise AssertionError(
+            f"{what} HLO contains host transfers (the monitor path must "
+            f"stay on device):\n  " + "\n  ".join(h.brief() for h in hits))
+
+
+def assert_static_shapes(hlo_text: str, what: str = "edge step",
+                         allow: Iterable[str] = ()) -> None:
+    hits = dynamic_shape_instructions(hlo_text, allow)
+    if hits:
+        raise AssertionError(
+            f"{what} HLO contains bounded-dynamic shapes (serving jits "
+            f"are shape-static):\n  " + "\n  ".join(h.brief() for h in hits))
+
+
+# ---------------------------------------------------------------------------
+# Monitor-path lowering
+# ---------------------------------------------------------------------------
+
+
+def _shapes(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def monitor_path_hlo(engine, include_catchup: bool = True) -> Dict[str, str]:
+    """Compiled HLO of the monitor-path kernels of a
+    ``CollaborativeEngine`` — the jits ``_monitor_prologue`` drives every
+    step (masked edge decode, u head, per-slot history record), plus the
+    triggered server catch-up.  Works on sharded AND unsharded engines:
+    the lowering uses whatever jit wrappers the engine currently holds,
+    so a mesh-sharded engine compiles with its placements baked in."""
+    B = engine.batch
+    tok_tail = tuple(engine._history.shape[2:])
+    tokens = jax.ShapeDtypeStruct((B,) + tok_tail, jnp.int32)
+    pos0 = jax.ShapeDtypeStruct((), jnp.int32)
+    posv = jax.ShapeDtypeStruct((B,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    hidden = jax.ShapeDtypeStruct((B, engine.edge.cfg.d_model), jnp.float32)
+    out = {
+        "decode_masked": engine.edge._step_masked.lower(
+            _shapes(engine.edge.params), _shapes(engine.edge.cache),
+            tokens, pos0, mask).compile().as_text(),
+        "u_head": engine._u_head.lower(
+            _shapes(engine.params), hidden).compile().as_text(),
+        "record_at": engine._record_at.lower(
+            _shapes(engine._history), tokens, posv, mask
+        ).compile().as_text(),
+    }
+    if include_catchup:
+        out["catchup"] = engine._catchup.lower(
+            _shapes(engine.params), _shapes(engine.server.cache),
+            _shapes(engine._history), posv, pos0, mask,
+            jax.ShapeDtypeStruct((B,), jnp.float32)).compile().as_text()
+    return out
+
+
+# rules the EDGE kernels must satisfy even unsharded; the catch-up is
+# exempt from collective-free on a sharded engine (its round count is a
+# legitimate cross-device max-reduction — see serving/mesh.py)
+EDGE_KERNELS = ("decode_masked", "u_head", "record_at")
+
+
+def check_monitor_path(engine, *, include_catchup: bool = True,
+                       sharded: Optional[bool] = None
+                       ) -> List[Tuple[str, str, List[HloInstruction]]]:
+    """Run all HLO rules over the monitor path; returns
+    ``(kernel, rule, hits)`` triples — empty hits mean the rule passed."""
+    if sharded is None:
+        sharded = getattr(engine, "mesh_spec", None) is not None
+    results = []
+    for name, txt in monitor_path_hlo(
+            engine, include_catchup=include_catchup).items():
+        if name in EDGE_KERNELS or not sharded:
+            results.append((name, "collective-free",
+                            collective_instructions(txt)))
+        results.append((name, "no-host-transfer",
+                        host_transfer_instructions(txt)))
+        results.append((name, "no-dynamic-shapes",
+                        dynamic_shape_instructions(txt)))
+    return results

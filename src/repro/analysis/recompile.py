@@ -1,0 +1,145 @@
+"""Compile-cache tracker: assert serving jits compile exactly once.
+
+Every jitted path in the serving stack is shape-static by design — after
+warmup, a churn episode (attach/detach, ragged pools, batch buckets)
+must hit the executable cache on every call.  A silent retrace is a 10x
+perf cliff; this module turns it into a test failure.
+
+Two independent signals, cross-checked:
+
+* per-function: ``jax.jit`` wrappers expose ``_cache_size()`` — the
+  number of compiled shape specializations.  Precise and attributable
+  (the violation names the path that retraced).
+* global: a ``jax.monitoring`` duration listener on XLA's
+  ``backend_compile`` event counts EVERY compilation in the process —
+  catching retraces in jits the guard was not told about.
+
+``MonitorSession.arm_recompile_guard()`` arms a guard over the engine's
+``jitted_paths()``; ``tools/check_static.py`` and
+``tests/test_churn.py`` drive it through real churn episodes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+# -- global compile counter (one process-wide listener, registered once) ----
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_global_compiles = 0
+_listener_registered = False
+
+
+def _on_event(event: str, duration: float, **kw) -> None:
+    global _global_compiles
+    if event == _COMPILE_EVENT:
+        _global_compiles += 1
+
+
+def _ensure_listener() -> None:
+    global _listener_registered
+    if not _listener_registered:
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _listener_registered = True
+
+
+def global_compile_count() -> int:
+    """Process-wide backend compilations observed since the first guard
+    was armed (0 before that)."""
+    _ensure_listener()
+    return _global_compiles
+
+
+def _cache_size(fn) -> Optional[int]:
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        return None
+
+
+class RecompileError(AssertionError):
+    """A watched jitted path compiled again after the guard was armed."""
+
+
+class RecompileGuard:
+    """Snapshot compile-cache sizes for a set of jitted paths; assert
+    they never grow.  Usage::
+
+        guard = RecompileGuard(engine.jitted_paths()).arm()
+        ... churn episode ...
+        guard.assert_stable()          # raises RecompileError on retrace
+
+    or as a context manager (asserts on clean exit).  Arm AFTER warmup:
+    the first call on each shape signature legitimately compiles.
+    """
+
+    def __init__(self, jits: Dict[str, Callable],
+                 *, track_global: bool = True, warm_only: bool = False):
+        self.jits = dict(jits)
+        self.track_global = track_global
+        # warm_only: watch only paths that have >=1 compiled signature at
+        # arm time — an episode that never exercised a path should not
+        # count that path's FIRST compile as a retrace
+        self.warm_only = warm_only
+        self._baseline: Optional[Dict[str, Optional[int]]] = None
+        self._global0 = 0
+        if track_global:
+            _ensure_listener()
+
+    @property
+    def armed(self) -> bool:
+        return self._baseline is not None
+
+    def arm(self) -> "RecompileGuard":
+        if self.warm_only:
+            self.jits = {name: fn for name, fn in self.jits.items()
+                         if (_cache_size(fn) or 0) > 0}
+        self._baseline = {name: _cache_size(fn)
+                          for name, fn in self.jits.items()}
+        if self.track_global:
+            self._global0 = global_compile_count()
+        return self
+
+    def violations(self) -> List[str]:
+        """Watched paths whose executable cache grew since ``arm()``."""
+        if self._baseline is None:
+            raise RuntimeError("guard not armed (call arm() after warmup)")
+        out = []
+        for name, fn in self.jits.items():
+            before, now = self._baseline[name], _cache_size(fn)
+            if before is not None and now is not None and now > before:
+                out.append(f"{name}: {before} -> {now} compiled "
+                           f"specializations")
+        return out
+
+    def global_compiles(self) -> int:
+        """Backend compilations ANYWHERE in the process since ``arm()``."""
+        if self._baseline is None:
+            raise RuntimeError("guard not armed (call arm() after warmup)")
+        return global_compile_count() - self._global0 \
+            if self.track_global else 0
+
+    def assert_stable(self, *, allow_global: Optional[int] = None) -> None:
+        """Raise ``RecompileError`` if any watched path retraced.  With
+        ``allow_global`` set, also bound the process-wide compile count
+        (0 = nothing at all may have compiled since arming)."""
+        bad = self.violations()
+        if bad:
+            raise RecompileError(
+                "jitted serving paths retraced after warmup (each path "
+                "must compile exactly once):\n  " + "\n  ".join(bad))
+        if allow_global is not None and self.track_global:
+            n = self.global_compiles()
+            if n > allow_global:
+                raise RecompileError(
+                    f"{n} backend compilations since the guard was armed "
+                    f"(allowed {allow_global}) — an unwatched jit "
+                    f"retraced")
+
+    def __enter__(self) -> "RecompileGuard":
+        return self.arm()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.assert_stable()

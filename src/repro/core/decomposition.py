@@ -10,7 +10,11 @@ Two instantiations:
                         the ground-truth expansion is known), or
      * ``independent``: a separate small FC net (paper appendix, Fig 5).
    Safety is structural: the corrector -s*sigma(v) is strictly negative, so
-   u >= f_hat always; u >= f holds when t is sized per Prop 2.
+   u >= f_hat always; u >= f holds when t is sized per Prop 2.  This is no
+   longer just argued: ``repro.analysis.signs`` proves corr >= 0 (hence
+   fhat <= u) on the traced jaxpr of ``collab_forward`` and the serving
+   catch-up for every registry arch x sigma kind, and
+   ``tools/check_static.py --strict`` gates CI on those certificates.
 
 2. ``init_collab_lm`` / ``collab_*`` — the scaled form used with the 10
    assigned backbones: v = full backbone + scalar corrector head (server),

@@ -459,3 +459,20 @@ class MonitorSession:
     def report(self) -> Dict[str, Any]:
         """The engine's communication/overlap report (see CommsMeter)."""
         return self._engine.comms.report()
+
+    def arm_recompile_guard(self, *, track_global: bool = True,
+                            warm_only: bool = False):
+        """Arm a ``analysis.recompile.RecompileGuard`` over every jitted
+        path of this session's engine and return it.  Call AFTER warmup
+        (each shape signature legitimately compiles once — a ragged pool
+        adds a vector-t catch-up variant); from then on, any retrace
+        across churn makes ``guard.assert_stable()`` raise.  The guard
+        the ROADMAP autoscaling work keys its batch buckets on.
+
+        ``warm_only`` watches only paths the episode already compiled —
+        use when the workload may leave optional paths (e.g. the
+        triggered catch-up) cold through warmup."""
+        from repro.analysis.recompile import RecompileGuard
+        return RecompileGuard(self._engine.jitted_paths(),
+                              track_global=track_global,
+                              warm_only=warm_only).arm()

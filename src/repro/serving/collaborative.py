@@ -150,6 +150,20 @@ class CollaborativeEngine:
             from repro.serving.mesh import shard_engine
             shard_engine(self, mesh)
 
+    def jitted_paths(self) -> Dict[str, object]:
+        """Name -> jit wrapper for every jitted path in the serving
+        stack (this engine's heads/catch-up/scan plus both towers'
+        decode kernels) — the watch list a
+        ``analysis.recompile.RecompileGuard`` snapshots to assert each
+        path compiles exactly once across a churn episode."""
+        paths = {"u_head": self._u_head, "v_head": self._v_head,
+                 "record_at": self._record_at, "catchup": self._catchup,
+                 "scan": self._scan}
+        for tower, se in (("edge", self.edge), ("server", self.server)):
+            for name, fn in se.jitted_paths().items():
+                paths[f"{tower}.{name}"] = fn
+        return paths
+
     # -- session factory -----------------------------------------------------
     def session(self, config=None, *, streams=None, worker=None):
         """Open a ``MonitorSession`` over this engine — THE public serving

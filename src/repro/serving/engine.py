@@ -172,6 +172,16 @@ class ServeEngine:
             self._axes = cache_batch_axes(self.cfg, self.batch, self.max_len)
         return self._axes
 
+    def jitted_paths(self):
+        """Name -> jit wrapper for every jitted path this engine drives —
+        the watch list for ``analysis.recompile.RecompileGuard`` (each
+        must compile exactly once per shape signature)."""
+        paths = {"step": self._step, "step_masked": self._step_masked,
+                 "prefill": self._prefill}
+        for variant, fn in self._step_at.items():
+            paths[f"step_at[with_logits={variant}]"] = fn
+        return paths
+
     # -- jitted kernels ----------------------------------------------------
     def _step_impl(self, params, cache, tokens, pos):
         return model_api.decode_step(params, self.cfg, cache, tokens, pos)

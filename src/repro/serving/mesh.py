@@ -60,7 +60,6 @@ from dataclasses import dataclass
 from typing import Any, Dict, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -68,9 +67,11 @@ from repro.distributed import sharding as shd
 
 _AXIS_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
 
-# HLO op mnemonics that imply cross-device communication.  ``partition-id``
-# and ``replica-id`` are cheap but flag anything partition-dependent; the
-# monitor path must contain none of these.
+# HLO op mnemonics that imply cross-device communication.  Kept for
+# backward compatibility; the matching itself now lives in
+# ``analysis.hlo`` and is OPCODE-level (parsed instructions), so a
+# benign op whose metadata/fusion name mentions a collective no longer
+# trips the check.
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
                   "all-to-all", "collective-permute", "collective-broadcast",
                   "ragged-all-to-all")
@@ -164,22 +165,18 @@ class MeshSpec:
 
 
 def collective_ops(hlo_text: str) -> Tuple[str, ...]:
-    """The collective-op lines appearing in compiled HLO text."""
-    hits = []
-    for line in hlo_text.splitlines():
-        if any(op in line for op in COLLECTIVE_OPS):
-            hits.append(line.strip()[:160])
-    return tuple(hits)
+    """The collective-op instruction lines in compiled HLO text —
+    op-level matching via ``analysis.hlo`` (instructions are parsed, so
+    collective names in metadata/fusion labels cannot false-positive)."""
+    from repro.analysis import hlo as ahlo
+    return tuple(i.brief() for i in ahlo.collective_instructions(hlo_text))
 
 
 def assert_collective_free(hlo_text: str, what: str = "edge step") -> None:
     """The paper's device-locality guarantee, checked on compiled HLO:
     the monitor path must not communicate across devices."""
-    hits = collective_ops(hlo_text)
-    if hits:
-        raise AssertionError(
-            f"{what} HLO contains cross-device collectives (the monitor "
-            f"path must be collective-free):\n  " + "\n  ".join(hits))
+    from repro.analysis import hlo as ahlo
+    ahlo.assert_collective_free(hlo_text, what)
 
 
 def bytes_per_device(tree: Any) -> int:
@@ -201,35 +198,20 @@ def bytes_per_device(tree: Any) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _shapes(tree: Any) -> Any:
-    return jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
-
-
 def edge_hlo(engine) -> Dict[str, str]:
     """Compiled HLO of the three monitor-path kernels of a SHARDED
     engine: the dense masked edge decode, the u head, and the per-slot
     history record.  These are exactly the jits ``_monitor_prologue``
-    drives every step — together they ARE the edge/monitor path."""
+    drives every step — together they ARE the edge/monitor path.
+
+    The lowering itself lives in ``analysis.hlo.monitor_path_hlo`` and
+    also runs UNSHARDED (the edge rules apply to single-device engines
+    too); this wrapper keeps the sharded-only contract for mesh users.
+    """
+    from repro.analysis import hlo as ahlo
     if getattr(engine, "mesh_spec", None) is None:
         raise ValueError("engine is not mesh-sharded (use shard_engine)")
-    B = engine.batch
-    tok_tail = tuple(engine._history.shape[2:])
-    tokens = jax.ShapeDtypeStruct((B,) + tok_tail, jnp.int32)
-    pos0 = jax.ShapeDtypeStruct((), jnp.int32)
-    posv = jax.ShapeDtypeStruct((B,), jnp.int32)
-    mask = jax.ShapeDtypeStruct((B,), jnp.bool_)
-    hidden = jax.ShapeDtypeStruct((B, engine.edge.cfg.d_model), jnp.float32)
-    return {
-        "decode_masked": engine.edge._step_masked.lower(
-            _shapes(engine.edge.params), _shapes(engine.edge.cache),
-            tokens, pos0, mask).compile().as_text(),
-        "u_head": engine._u_head.lower(
-            _shapes(engine.params), hidden).compile().as_text(),
-        "record_at": engine._record_at.lower(
-            _shapes(engine._history), tokens, posv, mask
-        ).compile().as_text(),
-    }
+    return ahlo.monitor_path_hlo(engine, include_catchup=False)
 
 
 def shard_engine(engine, spec: Union[str, MeshSpec], *,

@@ -1,0 +1,321 @@
+"""The static verifier itself: interval domain, jaxpr sign certificates,
+HLO rule engine (op-level, metadata-immune), and the recompile guard.
+
+tier-1 coverage of ``src/repro/analysis`` WITHOUT the full registry
+sweep (that is ``tools/check_static.py --strict``, CI's static-analysis
+job).  Includes the runtime complement to the static proof: a property
+test that ``fhat <= u`` survives float32/bfloat16 rounding at +-1e4
+logit tails — the regression class the sign domain abstracts away.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import hlo as ahlo
+from repro.analysis import recompile as arc
+from repro.analysis import signs
+from repro.analysis.signs import Interval
+from repro.configs import registry
+from repro.core import decomposition as deco
+from repro.kernels.ref import monitor_combine_ref
+from repro.serving import mesh as mesh_mod
+
+INF = math.inf
+
+
+# ---------------------------------------------------------------------------
+# Interval domain
+# ---------------------------------------------------------------------------
+
+
+class TestInterval:
+    def test_arithmetic(self):
+        a, b = Interval(-1.0, 2.0), Interval(3.0, 4.0)
+        assert signs.iadd(a, b) == Interval(2.0, 6.0)
+        assert signs.isub(b, a) == Interval(1.0, 5.0)
+        assert signs.imul(a, b) == Interval(-4.0, 8.0)
+
+    def test_mul_zero_times_inf_is_sound(self):
+        # the 0 * inf := 0 convention: [0, inf] * [0, 1] stays [0, inf]
+        assert signs.imul(Interval(0.0, INF), Interval(0.0, 1.0)) \
+            == Interval(0.0, INF)
+        assert signs.imul(Interval(0.0, INF), Interval(-1.0, 0.0)) \
+            == Interval(-INF, 0.0)
+
+    def test_nan_widens_to_top(self):
+        assert Interval(float("nan"), 1.0) == signs.TOP
+
+    def test_div_excluding_zero(self):
+        assert signs.idiv(Interval(1.0, 2.0), Interval(2.0, 4.0)) \
+            == Interval(0.25, 1.0)
+        assert signs.idiv(Interval(1.0, 2.0), Interval(-1.0, 1.0)) \
+            == signs.TOP
+
+
+class TestInterpreter:
+    def _out(self, fn, *avals, in_intervals=None):
+        closed = jax.make_jaxpr(fn)(*avals)
+        return signs.analyze_jaxpr(closed, in_intervals).out_nodes
+
+    def test_sigmoid_bounded(self):
+        (node,) = self._out(jax.nn.sigmoid,
+                            jax.ShapeDtypeStruct((4,), jnp.float32))
+        assert node.ival.lo >= 0.0 and node.ival.hi <= 1.0
+
+    def test_scaled_sigmoid_nonneg(self):
+        (node,) = self._out(lambda x: 0.2 * jax.nn.sigmoid(x),
+                            jax.ShapeDtypeStruct((4,), jnp.float32))
+        ok, _ = signs.prove_nonneg(node)
+        assert ok
+
+    def test_negative_scale_refuted_with_chain(self):
+        (node,) = self._out(lambda x: -0.2 * jax.nn.sigmoid(x),
+                            jax.ShapeDtypeStruct((4,), jnp.float32))
+        ok, chain = signs.prove_nonneg(node)
+        assert not ok
+        assert any("mul" in c for c in chain)
+
+    def test_where_upper_bound_through_pjit(self):
+        # jnp.where lowers to a nested pjit; the structural prover must
+        # see the outer u inside it
+        def f(u, v, trig):
+            return jnp.where(trig, u - 0.2 * jax.nn.sigmoid(v), u), u
+        fhat, u = self._out(
+            f, jax.ShapeDtypeStruct((4,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.bool_))
+        ok, _ = signs.prove_le(fhat, u)
+        assert ok
+
+    def test_add_positive_refutes_upper_bound(self):
+        def f(u, v):
+            return u + jax.nn.sigmoid(v), u
+        fhat, u = self._out(f, jax.ShapeDtypeStruct((4,), jnp.float32),
+                            jax.ShapeDtypeStruct((4,), jnp.float32))
+        ok, _ = signs.prove_le(fhat, u)
+        assert not ok
+
+    def test_loop_carry_is_top_but_sound(self):
+        def f(x):
+            return jax.lax.fori_loop(
+                0, 3, lambda i, c: jax.nn.sigmoid(c), x)
+        (node,) = self._out(f, jax.ShapeDtypeStruct((), jnp.float32))
+        # carry join includes the [0,1] body output and the TOP init
+        assert node.ival == signs.TOP or node.ival.lo <= 0.0
+
+    def test_input_refinement(self):
+        (node,) = self._out(lambda x: x * 2.0,
+                            jax.ShapeDtypeStruct((4,), jnp.float32),
+                            in_intervals=[Interval(0.0, 1.0)])
+        assert node.ival == Interval(0.0, 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Sign certificates (single arch here; the sweep is check_static)
+# ---------------------------------------------------------------------------
+
+
+class TestCertificates:
+    def test_forward_proves_both_sigmas(self):
+        cfg = registry.get_smoke("granite-8b")
+        for kind in signs.SIGMA_KINDS:
+            cert = signs.verify_forward(cfg, arch="granite-8b", sigma=kind)
+            assert cert.ok, cert.detail
+            assert cert.corr_interval.nonneg
+
+    def test_catchup_proves(self):
+        cfg = registry.get_smoke("granite-8b")
+        cert = signs.verify_catchup(cfg, arch="granite-8b")
+        assert cert.ok, cert.detail
+
+    def test_flipped_sign_refuted_with_counterexample(self):
+        cfg = registry.get_smoke("granite-8b")
+        cert = signs.verify_forward(cfg, arch="granite-8b", s=-0.2)
+        assert not cert.ok
+        assert "mul" in cert.detail  # the chain names the offending prim
+        assert cert.corr_interval.lo < 0.0
+
+
+# ---------------------------------------------------------------------------
+# HLO rule engine
+# ---------------------------------------------------------------------------
+
+
+class TestHloRules:
+    def test_parser_reads_opcodes_and_shapes(self):
+        txt = ("ENTRY %main {\n"
+               "  %p0 = f32[4,8]{1,0} parameter(0)\n"
+               "  ROOT %s = (f32[4]{0}, s32[]) custom-call(%p0), "
+               'custom_call_target="TopK"\n}\n')
+        instrs = ahlo.parse_hlo(txt)
+        assert [i.opcode for i in instrs] == ["parameter", "custom-call"]
+        assert instrs[1].custom_call_target == "TopK"
+
+    def test_benign_metadata_name_is_not_a_collective(self):
+        """Regression (the old substring scan's false positive): an op
+        whose METADATA carries a collective-sounding scope name must not
+        trip the collective-free rule."""
+        def f(x):
+            with jax.named_scope("all_gather_like"):
+                return x + 1.0
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)).compile().as_text()
+        assert "all_gather_like" in txt  # the bait really is in the text
+        assert ahlo.collective_instructions(txt) == []
+        ahlo.assert_collective_free(txt, "benign metadata")  # no raise
+        # and via the serving surface that migrated onto the engine
+        assert mesh_mod.collective_ops(txt) == ()
+        mesh_mod.assert_collective_free(txt, "benign metadata")
+
+    def test_real_collective_still_raises(self):
+        # layout-free shapes (the self-probe line test_mesh also uses)
+        txt = "%ar = f32[8] all-reduce(f32[1] %x)"
+        assert len(ahlo.collective_instructions(txt)) == 1
+        with pytest.raises(AssertionError, match="collective"):
+            ahlo.assert_collective_free(txt, "probe")
+        with pytest.raises(AssertionError, match="collective"):
+            mesh_mod.assert_collective_free(txt, "probe")
+
+    def test_async_collective_halves_flagged(self):
+        txt = ("%s = f32[8]{0} all-reduce-start(f32[8]{0} %x)\n"
+               "%d = f32[8]{0} all-reduce-done(f32[8]{0} %s)\n")
+        assert len(ahlo.collective_instructions(txt)) == 2
+
+    def test_host_callback_flagged_topk_allowed(self):
+        def f(x):
+            return jax.pure_callback(
+                lambda a: np.asarray(a) * 2.0,
+                jax.ShapeDtypeStruct((4,), jnp.float32), x)
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)).compile().as_text()
+        hits = ahlo.host_transfer_instructions(txt)
+        assert hits and all(i.opcode == "custom-call" for i in hits)
+        with pytest.raises(AssertionError, match="host"):
+            ahlo.assert_no_host_transfer(txt, "callback probe")
+
+        def g(x):
+            return jax.lax.top_k(x, 2)
+        txt2 = jax.jit(g).lower(
+            jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
+        assert ahlo.host_transfer_instructions(txt2) == []
+
+    def test_dynamic_shape_rule(self):
+        txt = "%x = f32[<=8]{0} parameter(0)"
+        assert len(ahlo.dynamic_shape_instructions(txt)) == 1
+        assert ahlo.dynamic_shape_instructions("%x = f32[8]{0} parameter(0)") \
+            == []
+
+    def test_unsharded_monitor_path_passes_all_rules(self):
+        from repro.analysis.rules import _engine_for
+        eng = _engine_for(registry.get_smoke("granite-8b"))
+        results = ahlo.check_monitor_path(eng)
+        kernels = {k for k, _, _ in results}
+        assert {"decode_masked", "u_head", "record_at",
+                "catchup"} <= kernels
+        for kernel, rule, hits in results:
+            assert not hits, (kernel, rule,
+                              [h.brief() for h in hits])
+
+
+# ---------------------------------------------------------------------------
+# Recompile guard
+# ---------------------------------------------------------------------------
+
+
+class TestRecompileGuard:
+    def test_stable_and_violation(self):
+        f = jax.jit(lambda x: x * 2.0)
+        f(jnp.zeros((2,)))
+        guard = arc.RecompileGuard({"f": f}, track_global=False).arm()
+        f(jnp.ones((2,)))          # same signature: cache hit
+        assert guard.violations() == []
+        guard.assert_stable()
+        f(jnp.zeros((3,)))         # new shape: retrace
+        assert guard.violations()
+        with pytest.raises(arc.RecompileError, match="f: 1 -> 2"):
+            guard.assert_stable()
+
+    def test_context_manager_raises_on_exit(self):
+        f = jax.jit(lambda x: x + 1.0)
+        f(jnp.zeros((2,)))
+        with pytest.raises(arc.RecompileError):
+            with arc.RecompileGuard({"f": f}, track_global=False):
+                f(jnp.zeros((5,)))
+
+    def test_unarmed_guard_refuses(self):
+        g = arc.RecompileGuard({}, track_global=False)
+        with pytest.raises(RuntimeError, match="not armed"):
+            g.violations()
+
+    def test_global_counter_sees_fresh_compiles(self):
+        g = arc.RecompileGuard({}, track_global=True).arm()
+        jax.jit(lambda x: x * 3.0 + 1.0)(jnp.zeros((7,)))  # fresh jit
+        assert g.global_compiles() >= 1
+
+    def test_engine_jitted_paths_enumeration(self):
+        from repro.analysis.rules import _engine_for
+        eng = _engine_for(registry.get_smoke("granite-8b"))
+        paths = eng.jitted_paths()
+        for expected in ("catchup", "u_head", "edge.step_masked",
+                         "server.step_masked", "edge.prefill"):
+            assert expected in paths, sorted(paths)
+
+
+# ---------------------------------------------------------------------------
+# Mutation self-test plumbing (cheap subset; full set is check_static)
+# ---------------------------------------------------------------------------
+
+
+class TestMutationSelftest:
+    def test_all_rules_fire(self):
+        from repro.analysis import rules
+        for r in rules.mutation_selftest():
+            assert r.ok, f"{r.rule} did not fire: {r.target} {r.detail}"
+
+    def test_report_formatting(self):
+        from repro.analysis.rules import RuleResult, format_report
+        rep = format_report([RuleResult("r", "t", True),
+                             RuleResult("r", "t2", False, "boom")])
+        assert "FAIL" in rep and "boom" in rep and "1 failed" in rep
+
+
+# ---------------------------------------------------------------------------
+# Runtime complement: fhat <= u survives rounding at the tails
+# ---------------------------------------------------------------------------
+
+
+class TestSafetyAtTails:
+    @settings(max_examples=60, deadline=None)
+    @given(u=st.floats(min_value=-1e4, max_value=1e4),
+           v=st.floats(min_value=-1e4, max_value=1e4),
+           s=st.floats(min_value=0.0, max_value=4.0),
+           dtype=st.sampled_from(["float32", "bfloat16"]),
+           kind=st.sampled_from(["sigmoid", "tanh01"]))
+    def test_fhat_le_u_under_rounding(self, u, v, s, dtype, kind):
+        """The static proof works in exact reals; this pins down that
+        float32/bfloat16 rounding cannot push fhat above u even at
+        +-1e4 logits (saturated sigma, catastrophic cancellation
+        territory)."""
+        dt = jnp.dtype(dtype)
+        uj = jnp.asarray(u, dt)
+        vj = jnp.asarray(v, dt)
+        corr = (jnp.asarray(s, dt) * deco.sigma(vj, kind)).astype(dt)
+        fhat = (uj - corr).astype(dt)
+        assert bool(fhat <= uj), (
+            f"fhat={fhat} > u={uj} at v={v} s={s} {dtype}/{kind}")
+
+    @settings(max_examples=40, deadline=None)
+    @given(u=st.floats(min_value=-1e4, max_value=1e4),
+           v=st.floats(min_value=-1e4, max_value=1e4))
+    def test_monitor_combine_ref_respects_bound(self, u, v):
+        """The fused serving combine (the op the catch-up actually
+        calls) honours the same inequality at the tails."""
+        uj = jnp.asarray([u], jnp.float32)
+        vj = jnp.asarray([v], jnp.float32)
+        fhat, _, _ = monitor_combine_ref(uj, vj, uj, s=0.2, threshold=0.1,
+                                         margin=0.0)
+        assert bool(fhat[0] <= uj[0])

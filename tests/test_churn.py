@@ -97,6 +97,20 @@ class TestLocalChurn:
                 for i, sid in enumerate(r["streams"]):
                     outs[sid].append((r["u"][i], r["fhat"][i],
                                       r["triggered"][i]))
+            # snapshot the accounting the assertions below check BEFORE
+            # the guarded epilogue perturbs it
+            seen_final = int(eng.comms.tokens_seen[1])
+            server_pos_d = int(eng.server_pos[1])
+            # recompile guard (analysis.recompile): the episode above is
+            # the warmup — every exercised jitted path must now be
+            # compiled; further churn may not retrace ANY of them
+            guard = session.arm_recompile_guard(track_global=False,
+                                                warm_only=True)
+            session.detach("a")
+            assert session.attach("e") == 0
+            for t2 in range(4):
+                session.step({sid: stream[0, t2] for sid in session.streams})
+        guard.assert_stable()  # zero retraces across the guarded churn
 
         # streams present the whole run: bit-identical to the fixed batch
         for sid, row in (("a", 0), ("c", 2)):
@@ -116,7 +130,6 @@ class TestLocalChurn:
 
         # detached slot stops accruing comms: steps detach_at..attach_at-1
         # charge nothing to slot 1
-        seen_final = int(eng.comms.tokens_seen[1])
         assert seen_at_detach == detach_at
         assert seen_final == seen_at_detach + (S - attach_at), \
             "detached slot accrued charges while empty"
@@ -127,7 +140,34 @@ class TestLocalChurn:
                                       ref_d["u"][1][:S - attach_at])
         np.testing.assert_array_equal(_trace(outs, "d", 2),
                                       ref_d["triggered"][1][:S - attach_at])
-        assert 0 <= eng.server_pos[1] <= S - attach_at
+        assert 0 <= server_pos_d <= S - attach_at
+
+    def test_recompile_exactly_once_per_signature(self):
+        """The churn guard's strong form: with the threshold forced low
+        (every step triggers the catch-up), a full churn episode leaves
+        the catch-up with EXACTLY its two legitimate compiled signatures
+        — scalar-t (uniform pool) and vector-t (ragged pool) — and every
+        monitor-path jit with exactly one."""
+        cfg, params, stream = _setup(threshold=-1e9, length=12)
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        with eng.session(streams=["a", "b", "c"]) as s:
+            for t in range(4):                      # uniform: scalar-t
+                s.step({sid: stream[i, t] for i, sid in enumerate("abc")})
+            s.detach("b")
+            for t in range(4, 6):                   # ragged: vector-t
+                s.step({"a": stream[0, t], "c": stream[2, t]})
+            assert s.attach("d") == 1
+            guard = s.arm_recompile_guard(track_global=False)
+            for t in range(6, 12):                  # churn under guard
+                s.step({"a": stream[0, t], "c": stream[2, t],
+                        "d": stream[1, t - 6]})
+            guard.assert_stable()
+        sizes = {n: int(f._cache_size())
+                 for n, f in eng.jitted_paths().items()}
+        assert sizes["catchup"] == 2, sizes         # scalar-t + vector-t
+        assert sizes["edge.step_masked"] == 1, sizes
+        assert sizes["u_head"] == 1, sizes
+        assert sizes["record_at"] == 1, sizes
 
     def test_detached_slots_ship_nothing_even_when_loud(self):
         """A detached slot must not trigger or ship even with a monitor

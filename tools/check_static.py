@@ -1,0 +1,80 @@
+"""Compile-time invariant verifier for the whole serving stack.
+
+Runs every ``analysis`` rule against every registered arch and prints a
+report table (CI's ``static-analysis`` job):
+
+* ``sign-safety`` — jaxpr interval/sign certificates: ``corr >= 0`` and
+  ``fhat <= u`` on the training forward AND the serving catch-up, per
+  arch x sigma kind (counterexample primitive chain on failure);
+* ``collective-free`` / ``no-host-transfer`` / ``no-dynamic-shapes`` —
+  parsed per-op HLO rules over each arch's compiled monitor path;
+* ``recompile-once`` — a guarded churn episode on the paper serving
+  config (each jitted path compiles exactly once after warmup);
+* the mutation self-test — seeds one violation per rule (sign flip,
+  injected psum, host callback, dynamic dim, forced retrace) and
+  asserts the rule fires.
+
+Usage::
+
+    python tools/check_static.py [--strict] [--arch NAME ...]
+                                 [--no-selftest] [--no-recompile]
+                                 [--verbose]
+
+``--strict`` exits nonzero on any failed rule or non-firing mutation.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on any failure")
+    ap.add_argument("--arch", nargs="*", default=None,
+                    help="restrict to these registry archs")
+    ap.add_argument("--no-selftest", action="store_true",
+                    help="skip the mutation self-test")
+    ap.add_argument("--no-recompile", action="store_true",
+                    help="skip the churn recompile guard")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print rule details even on pass")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    # the psum mutation needs >=2 devices; pin the virtual device count
+    # BEFORE jax imports (no-op when the user already set XLA_FLAGS)
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+    from repro.analysis import rules
+
+    t0 = time.time()
+    results = []
+    results += rules.run_sign_rules(args.arch)
+    results += rules.run_hlo_rules(args.arch)
+    if not args.no_recompile:
+        results += rules.run_recompile_rule()
+    if not args.no_selftest:
+        selftest = rules.mutation_selftest()
+        for r in selftest:
+            r.rule = "selftest/" + r.rule
+        results += selftest
+
+    print(rules.format_report(results, verbose=args.verbose))
+    print(f"({time.time() - t0:.1f}s)")
+    n_fail = sum(not r.ok for r in results)
+    if n_fail and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
