@@ -26,6 +26,13 @@ Workloads:
     Latency here is MEASURED on the socket (rtt_mean_ms column), not
     simulated.  Run standalone with ``python benchmarks/bench_serving.py
     --transport wire``.
+  * fleet (``--fleet``, batch 64) — TWO correction-server subprocesses
+    behind the least-loaded router (serving/fleet.py): a routed arm
+    (one redirect hop at HELLO, zero per-token overhead) and a
+    SIGKILL-failover arm where the serving process is killed mid-run
+    and the client migrates by re-HELLO + full replay — the replay cost
+    lands in failovers/failover_tx_kb/replayed_tokens columns while
+    u/trigger stay bitwise vs the scan.
   * granite-8b smoke — LM-scale sanity rows (compute-dominated on CPU).
   * slot-pool churn sweep (``--churn``, batch 64) — MonitorSession
     attach/detach at increasing rates: the throughput cost of mid-flight
@@ -385,6 +392,94 @@ def run_mesh_sweep(csv: List[str], max_devices: int) -> None:
         print(row, flush=True)
 
 
+def _bench_fleet(name: str, cfg, batch: int, steps: int, csv: List[str], *,
+                 rate: float = 0.3,
+                 staleness: int = SERVING_MAX_STALENESS) -> None:
+    """Fleet bench: TWO correction-server subprocesses behind the
+    least-loaded router (serving/fleet.py), a batch-``batch`` client
+    attached through a ``fleet:`` address.  Two arms: the routed run
+    (router adds one redirect hop at HELLO, zero per-token overhead) and
+    the same run with a SIGKILL of the serving process mid-flight — the
+    failover arm prices the re-HELLO + full replay migration
+    (``comms['failover']``) while u/trigger stay bitwise vs the scan."""
+    import threading
+
+    from repro.serving.fleet import FleetSupervisor
+
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
+    cfg = _calibrate(cfg, params, stream, batch, max_len, rate)
+    warm = 6
+
+    sup = FleetSupervisor("paper-synthetic-serving", n_servers=2,
+                          slots=max(batch, SERVING_WIRE_SLOTS),
+                          max_len=max_len, backend="subprocess",
+                          respawn=False)
+    stop = threading.Event()
+    watcher = threading.Thread(target=sup.run_forever, args=(stop,),
+                               daemon=True)
+    try:
+        sup.start(wait=True)
+        watcher.start()
+
+        def timed(kill_at=None):
+            eng = CollaborativeEngine(params, cfg, batch=batch,
+                                      max_len=max_len)
+            sess = eng.session(SessionConfig(
+                mode="async", max_staleness=staleness,
+                transport=TransportSpec(
+                    "wire", address="fleet:" + sup.router_address)))
+            sess.__enter__()
+            outs = []
+            for t in range(warm):
+                outs.append(sess.step(jnp.asarray(stream[:, t])))
+            t0 = time.time()
+            for t in range(warm, steps):
+                outs.append(sess.step(jnp.asarray(stream[:, t])))
+                if kill_at == t:
+                    victim = next(h for h in sup.servers.values()
+                                  if h.address == eng._worker.server_address)
+                    victim.kill()   # a real SIGKILL, no goodbye
+            sess.close()
+            dt = time.time() - t0
+            res = {k: np.stack([o[k] for o in outs], 1)
+                   for k in ("u", "triggered")}
+            return eng, res, batch * (steps - warm) / dt
+
+        routed_eng, routed_res, tps_routed = timed()
+        kill_eng, kill_res, tps_kill = timed(kill_at=(warm + steps) // 2)
+
+        # routing and failover must not change the protocol
+        scan = _scan(params, cfg, stream, batch, max_len)
+        for res in (routed_res, kill_res):
+            assert np.array_equal(res["u"], scan["u"])
+            assert np.array_equal(res["triggered"], scan["triggered"])
+
+        trig = float(routed_res["triggered"].mean())
+        for label, eng, tps in (("routed", routed_eng, tps_routed),
+                                ("failover", kill_eng, tps_kill)):
+            rep = eng.comms.report()
+            w = rep["wire"]
+            fo = rep.get("failover", {"failovers": 0, "tx_bytes": 0,
+                                      "replayed_tokens": 0})
+            assert fo["failovers"] == (1 if label == "failover" else 0)
+            csv.append(
+                f"serving/{name}_fleet_{label},"
+                f"{1e6 / max(tps, 1e-9) * batch:.1f},"
+                f"tokens_per_sec={tps:.0f};transport=fleet;"
+                f"n_servers=2;trigger_rate={trig:.3f};"
+                f"failovers={fo['failovers']};"
+                f"failover_tx_kb={fo['tx_bytes'] / 1e3:.1f};"
+                f"replayed_tokens={fo['replayed_tokens']};"
+                f"wire_tx_kb={w['tx_bytes'] / 1e3:.1f};"
+                f"rtt_mean_ms={w['rtt_mean_s'] * 1e3:.2f}")
+    finally:
+        stop.set()
+        watcher.join(timeout=10)
+        sup.close()
+
+
 def run_churn(csv: List[str]) -> None:
     """The churn-sweep rows only (bench_serving --churn)."""
     n0 = len(csv)
@@ -399,6 +494,15 @@ def run_wire(csv: List[str]) -> None:
     n0 = len(csv)
     _bench_wire("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
                 csv=csv, rate=0.3)
+    for row in csv[n0:]:
+        print(row, flush=True)
+
+
+def run_fleet(csv: List[str]) -> None:
+    """The fleet rows only (routed + SIGKILL-failover arms)."""
+    n0 = len(csv)
+    _bench_fleet("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+                 csv=csv, rate=0.3)
     for row in csv[n0:]:
         print(row, flush=True)
 
@@ -450,6 +554,13 @@ if __name__ == "__main__":
     ap.add_argument("--transport", choices=("all", "wire"), default="all",
                     help="'wire' runs only the two-process socket bench "
                          "and appends its rows to results/bench.csv")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run only the fleet bench: 2 correction-server "
+                         "subprocesses behind the least-loaded router, a "
+                         "batch-64 client through a fleet: address, one "
+                         "routed arm and one SIGKILL-failover arm, "
+                         "appending failovers/failover_tx_kb/"
+                         "tokens_per_sec rows to results/bench.csv")
     ap.add_argument("--churn", action="store_true",
                     help="run only the slot-pool churn sweep (attach/"
                          "detach rates at batch 64) and append its "
@@ -469,9 +580,12 @@ if __name__ == "__main__":
         print("MESHROW " + _mesh_child_row(*args._mesh_child), flush=True)
         sys.exit(0)
     rows: List[str] = []
-    if args.transport == "wire" or args.churn or args.devices is not None:
+    if (args.transport == "wire" or args.churn or args.fleet
+            or args.devices is not None):
         if args.churn:
             run_churn(rows)
+        elif args.fleet:
+            run_fleet(rows)
         elif args.devices is not None:
             run_mesh_sweep(rows, args.devices)
         else:

@@ -138,6 +138,13 @@ class CommsMeter:
     wire_rtt_s: float = 0.0    # sum of measured dispatch->reply round trips
     wire_rtt_max_s: float = 0.0
     wire_replies: int = 0
+    # -- fleet failover (filled by SocketWorker when it migrates) -----------
+    failovers: int = 0               # completed re-HELLO + replay migrations
+    failover_tx_bytes: int = 0       # handshake + replay + resend tx bytes
+    failover_rx_bytes: int = 0       # bytes read during recovery
+    failover_replayed_tokens: int = 0  # tokens re-shipped (already paid once)
+    failover_replay_requests: int = 0  # synthetic recovery requests sent
+    failover_resent_requests: int = 0  # real in-flight requests re-sent
 
     def __post_init__(self) -> None:
         if self.tokens_sent is None:
@@ -149,6 +156,7 @@ class CommsMeter:
         self._per_stream_used = False
         self._async_used = False
         self._wire_used = False
+        self._failover_used = False
         self._inflight_reqs = 0
 
     def update(self, n_triggered: int, n_total: int) -> None:
@@ -221,6 +229,35 @@ class CommsMeter:
         self.wire_rtt_s += float(dt)
         self.wire_rtt_max_s = max(self.wire_rtt_max_s, float(dt))
 
+    # -- fleet failover (replay bytes audited separately from steady state) --
+    def record_failover(self) -> None:
+        """One completed migration: re-HELLO at a new server plus the cold
+        catch-up replay that rebuilt the lease from the client's history."""
+        self._failover_used = True
+        self.failovers += 1
+
+    def record_failover_tx(self, nbytes: int) -> None:
+        """Bytes the recovery path wrote (handshake, replay requests,
+        resent in-flight requests) — charged here, NOT to ``wire``, so the
+        steady-state byte invariant stays auditable."""
+        self._failover_used = True
+        self.failover_tx_bytes += int(nbytes)
+
+    def record_failover_rx(self, nbytes: int) -> None:
+        self._failover_used = True
+        self.failover_rx_bytes += int(nbytes)
+
+    def record_failover_tokens(self, n_tokens: int, *,
+                               resent: bool = False) -> None:
+        """``n_tokens`` re-shipped during recovery (each was already paid
+        for once in the wire bucket when first dispatched)."""
+        self._failover_used = True
+        self.failover_replayed_tokens += int(n_tokens)
+        if resent:
+            self.failover_resent_requests += 1
+        else:
+            self.failover_replay_requests += 1
+
     @property
     def overlap_ratio(self) -> float:
         """Fraction of request wall time (server compute + network) hidden
@@ -281,5 +318,14 @@ class CommsMeter:
                 "replies": self.wire_replies,
                 "rtt_mean_s": self.wire_rtt_s / max(self.wire_replies, 1),
                 "rtt_max_s": self.wire_rtt_max_s,
+            }
+        if self._failover_used:    # only when a fleet migration happened
+            rep["failover"] = {
+                "failovers": self.failovers,
+                "tx_bytes": self.failover_tx_bytes,
+                "rx_bytes": self.failover_rx_bytes,
+                "replayed_tokens": self.failover_replayed_tokens,
+                "replay_requests": self.failover_replay_requests,
+                "resent_requests": self.failover_resent_requests,
             }
         return rep

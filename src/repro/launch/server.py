@@ -51,13 +51,22 @@ def config_names():
 def spawn_subprocess(arch: str, *, uds: str, slots: int, max_len: int,
                      ready_file: str, ckpt_dir: Optional[str] = None,
                      extra_args: Tuple[str, ...] = (), quiet: bool = True,
-                     timeout_s: float = 180.0) -> "subprocess.Popen":
+                     timeout_s: Optional[float] = None,
+                     wait: bool = True) -> "subprocess.Popen":
     """Start ``python -m repro.launch.server`` as a subprocess and block
     until it is listening (the ready file appears) or ``timeout_s``
-    elapses.  Shared by the bench, the example demo, and tests so the
-    spawn/ready/teardown dance exists once."""
+    elapses.  Shared by the bench, the example demo, tests, and the
+    fleet supervisor so the spawn/ready/teardown dance exists once.
+
+    ``timeout_s=None`` uses the ``REPRO_SPAWN_DEADLINE_S`` env override
+    (default 240 s — jax import on a loaded 2-core CI container can eat
+    most of the old hardcoded 180 s).  ``wait=False`` returns the Popen
+    immediately (the fleet supervisor ready-waits N servers in parallel
+    with ``wait_ready``)."""
     import subprocess
 
+    if timeout_s is None:
+        timeout_s = float(os.environ.get("REPRO_SPAWN_DEADLINE_S", "240"))
     src = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     env = dict(os.environ)
@@ -71,6 +80,14 @@ def spawn_subprocess(arch: str, *, uds: str, slots: int, max_len: int,
     pipe = subprocess.PIPE if quiet else None
     proc = subprocess.Popen(cmd, env=env, stdout=pipe, stderr=pipe,
                             text=quiet or None)
+    if wait:
+        wait_ready(proc, ready_file, timeout_s, quiet=quiet)
+    return proc
+
+
+def wait_ready(proc: "subprocess.Popen", ready_file: str,
+               timeout_s: float, *, quiet: bool = True) -> None:
+    """Block until ``ready_file`` exists or the process dies/times out."""
     deadline = time.monotonic() + timeout_s
     while not os.path.exists(ready_file):
         if proc.poll() is not None:
@@ -80,7 +97,6 @@ def spawn_subprocess(arch: str, *, uds: str, slots: int, max_len: int,
             proc.terminate()
             raise RuntimeError("correction server startup timed out")
         time.sleep(0.05)
-    return proc
 
 
 def _force_host_devices(mesh: str) -> None:
@@ -122,6 +138,11 @@ def main(argv=None) -> None:
                     help="touch this path once listening (subprocess sync)")
     ap.add_argument("--idle-exit-s", type=float, default=None,
                     help="exit after all sessions have been gone this long")
+    ap.add_argument("--stats-file", default=None,
+                    help="heartbeat: atomically rewrite this JSON file "
+                         "with a stats snapshot every --stats-interval-s "
+                         "(the fleet supervisor's load/liveness channel)")
+    ap.add_argument("--stats-interval-s", type=float, default=0.5)
     args = ap.parse_args(argv)
 
     if (args.uds is None) == (args.port is None):
@@ -141,11 +162,16 @@ def main(argv=None) -> None:
         print(f"restored {args.ckpt_dir}", flush=True)
 
     from repro.serving.server import CorrectionServer
+    from repro.serving.tracker import JsonFileTracker
+    tracker = (JsonFileTracker(args.stats_file)
+               if args.stats_file else None)
     srv = CorrectionServer(cfg, params, slots=args.slots,
                            max_len=args.max_len, uds=args.uds,
                            host=args.host,
                            port=args.port if args.port is not None else 0,
-                           coalesce=not args.no_coalesce, mesh=args.mesh)
+                           coalesce=not args.no_coalesce, mesh=args.mesh,
+                           tracker=tracker,
+                           stats_interval_s=args.stats_interval_s)
     print(f"correction server: arch={args.arch} slots={args.slots} "
           f"max_len={args.max_len} coalesce={not args.no_coalesce} "
           f"mesh={srv.mesh_spec} listening on {srv.address}", flush=True)
@@ -160,9 +186,17 @@ def main(argv=None) -> None:
         except ValueError:
             pass  # not the main thread
     try:
+        # SIGUSR1 = drain: GOAWAY the sessions, refuse new HELLOs, exit
+        # once empty — the fleet supervisor's graceful-retire signal
+        signal.signal(signal.SIGUSR1, lambda *_: srv.request_drain())
+    except (ValueError, AttributeError):
+        pass  # not the main thread / platform without SIGUSR1
+    try:
         srv.serve_forever(stop=stop, idle_exit_s=args.idle_exit_s)
     finally:
         st = srv.stats
+        if tracker is not None:
+            tracker.log_summary(srv.stats_snapshot())
         print(f"served {st['sessions']} sessions, {st['requests']} requests "
               f"in {st['replays']} replays ({st['coalesced']} coalesced), "
               f"{st['attaches']} attaches / {st['detaches']} detaches, "

@@ -7,9 +7,18 @@ then serve through a ``MonitorSession``:
 ``repro.serving.server`` (the standalone correction server) is imported
 lazily: it builds jitted engines at construction; import it explicitly
 to run one.  Mesh-sharded serving (``SessionConfig(mesh="data:8")``)
-lives in ``repro.serving.mesh`` — see docs/sharding.md.
+lives in ``repro.serving.mesh`` — see docs/sharding.md.  A fleet of
+correction servers behind a routing supervisor
+(``TransportSpec.parse("fleet:<router>")``) lives in
+``repro.serving.fleet`` — see docs/fleet.md; like ``server`` it is
+imported lazily (its subprocess backend pulls in the launcher).
+Metrics trackers (the per-server heartbeat/stats surface) are in
+``repro.serving.tracker``.
 """
-from repro.serving import async_rpc, collaborative, engine, mesh, wire  # noqa: F401,E501
+from repro.serving import async_rpc, collaborative, engine, mesh, tracker, wire  # noqa: F401,E501
 from repro.serving.api import (MonitorSession, SessionConfig,  # noqa: F401
                                TransportSpec)
 from repro.serving.collaborative import CollaborativeEngine  # noqa: F401
+from repro.serving.tracker import (CompositeTracker, Histogram,  # noqa: F401
+                                   InMemoryTracker, JsonFileTracker,
+                                   LogTracker, NoopTracker, Tracker)

@@ -81,7 +81,15 @@ class TransportSpec:
                 (worker thread), ``mock_remote`` (thread + simulated
                 RTT), ``wire`` (real socket to a standalone correction
                 server — ``python -m repro.launch.server``).
-    address   — ``wire`` only: UDS path or ``host:port``.
+    address   — ``wire`` only: UDS path or ``host:port`` of one server,
+                or ``fleet:<router-address>`` to connect through a
+                ``FleetSupervisor`` router (``python -m
+                repro.launch.fleet``): the session HELLOs the router,
+                follows its REDIRECT to the least-loaded live server,
+                and transparently fails over — re-HELLO + replay — if
+                that server dies or drains (serving/fleet.py,
+                docs/fleet.md).  ``TransportSpec.parse("fleet:...")``
+                is shorthand for ``wire`` with a fleet address.
     latency_s — simulated round trip (stream/thread/mock_remote only;
                 the wire has whatever latency it actually has).
     coalesce  — ``wire`` only: opt out of server-side request
@@ -114,11 +122,15 @@ class TransportSpec:
     @classmethod
     def parse(cls, spec: Union[str, "TransportSpec"]) -> "TransportSpec":
         """``"stream"`` -> TransportSpec("stream");
-        ``"wire:/tmp/corr.sock"`` / ``"wire:host:port"`` -> wire + address.
+        ``"wire:/tmp/corr.sock"`` / ``"wire:host:port"`` -> wire + address;
+        ``"fleet:/tmp/router.sock"`` -> wire through a fleet router.
         A TransportSpec passes through unchanged."""
         if isinstance(spec, cls):
             return spec
-        kind, sep, rest = str(spec).partition(":")
+        s = str(spec)
+        if s.startswith("fleet:"):
+            return cls("wire", address=s)
+        kind, sep, rest = s.partition(":")
         return cls(kind, address=rest if sep else None)
 
 

@@ -358,6 +358,24 @@ class MockRemoteWorker(ThreadWorker):
         super().__init__(catchup_fn, params, cache, latency_s=latency_s)
 
 
+class _Flight:
+    """One unanswered request on the socket, kept until its reply lands
+    so a fleet failover can resend it verbatim.  ``internal`` flights are
+    the recovery replay's own synthetic requests (their replies are
+    consumed silently — the engine never sees them)."""
+
+    __slots__ = ("req_id", "internal", "buf", "t", "triggered", "n_tokens")
+
+    def __init__(self, req_id: int, internal: bool, buf: bytes, t: int,
+                 triggered: np.ndarray, n_tokens: int):
+        self.req_id = req_id
+        self.internal = internal
+        self.buf = buf
+        self.t = t
+        self.triggered = triggered
+        self.n_tokens = n_tokens
+
+
 class SocketWorker(ServerWorker):
     """The ``wire`` transport: catch-up requests cross a REAL socket to a
     standalone correction-server process (``serving/server.py``).
@@ -377,9 +395,36 @@ class SocketWorker(ServerWorker):
 
     ``coalesce=False`` opts the session out of server-side request
     coalescing (per-request replays — the bench baseline).
+
+    FLEET MODE (``address="fleet:<router>"``, serving/fleet.py): the
+    worker HELLOs the router, follows its REDIRECT to the least-loaded
+    live server, and treats the connection as expendable.  Because the
+    client is the source of truth for its own token history, a dead or
+    draining server costs a re-HELLO plus a cold replay — never state:
+
+      * every request stays in ``self._flights`` until its reply lands
+        (FIFO, mirroring the server's ordering contract), and
+        ``self._acked_pos`` tracks the per-row position the server has
+        CONFIRMED via replies;
+      * on EOF/reset (or a GOAWAY once the pipeline is empty) the worker
+        re-resolves through the router, re-HELLOs, replays each row's
+        acked prefix ``history[i, :acked_pos[i]]`` from position 0 via
+        synthetic internal requests, then resends the unanswered real
+        requests verbatim — reconstructing the server state bit-exactly
+        (the masked replay is position-deterministic), so survivors stay
+        bitwise identical to an uninterrupted run;
+      * every byte of that recovery (handshake, replay, resends) is
+        charged to ``CommsMeter``'s ``failover`` bucket, keeping the
+        steady-state ``wire`` byte invariants auditable.
+
+    Duplicate or stale replies (a chaos proxy re-sending a REPLY, or a
+    late frame racing a reconnect) are dropped by the head-of-flights
+    req_id check — the Dispatcher's FIFO contract is enforced here.
     """
 
     kind = "wire"
+
+    _FLEET_PREFIX = "fleet:"
 
     def __init__(self, cache, *, address: str, batch: int, max_len: int,
                  tok_tail: Tuple[int, ...] = (), coalesce: bool = True,
@@ -393,48 +438,158 @@ class SocketWorker(ServerWorker):
         self.cache = cache       # stays cold locally (see class docstring)
         self._closed = False
         self._comms = comms
-        self._reader = wire.FrameReader()
+        self._batch = int(batch)
+        self._hello = wire.Hello(batch, max_len, tuple(tok_tail), coalesce,
+                                 client)
+        self._fleet = address.startswith(self._FLEET_PREFIX)
+        self._target = address[len(self._FLEET_PREFIX):] if self._fleet \
+            else address
+        self._connect_timeout = connect_timeout
         self._replies: deque = deque()
         self._dispatch_wall: Dict[int, float] = {}
-        self._sock = wire.connect(address, timeout=connect_timeout)
-        try:
-            hello = wire.encode_hello(wire.Hello(
-                batch, max_len, tuple(tok_tail), coalesce, client))
-            self._sock.sendall(hello)
-            self._tx(len(hello))
-            ack = self._handshake()
-        except BaseException:
-            self._sock.close()  # a refused handshake must not leak the fd
-            raise
-        self.session_id = ack.session_id
-        self.slot_lo = ack.slot_lo
+        # -- failover state (fleet mode; harmless bookkeeping otherwise) -----
+        self._flights: "deque[_Flight]" = deque()
+        self._acked_pos = np.zeros(self._batch, np.int32)
+        self._last_history: Optional[np.ndarray] = None
+        self._must_move = False      # GOAWAY received: migrate when empty
+        self._failing_over = False   # routes _tx/_rx to the failover bucket
+        self._internal_next = 1 << 62  # clear of the Dispatcher's req_ids
+        self.server_address: Optional[str] = None
+        self._sock, self._reader = None, wire.FrameReader()
+        self._establish(self._connect_timeout)
 
     # -- metering ------------------------------------------------------------
     def _tx(self, n: int) -> None:
         if self._comms is not None:
-            self._comms.record_wire_tx(n)
+            if self._failing_over:
+                self._comms.record_failover_tx(n)
+            else:
+                self._comms.record_wire_tx(n)
 
     def _rx(self, n: int) -> None:
         if self._comms is not None:
-            self._comms.record_wire_rx(n)
+            if self._failing_over:
+                self._comms.record_failover_rx(n)
+            else:
+                self._comms.record_wire_rx(n)
+
+    # -- connection management -----------------------------------------------
+    def _establish(self, timeout: float) -> None:
+        """Connect + HELLO (via the router in fleet mode, following its
+        REDIRECT).  Fleet mode keeps retrying the router on a refused or
+        dead target until ``timeout`` — a SIGKILLed server is replaced by
+        a sibling on the next resolve; a direct address surfaces
+        ``HandshakeRefused`` / ``PeerGone`` to the caller unchanged (the
+        two failure modes the old ``connect()`` loop conflated)."""
+        wire = self._wire
+        deadline = time.monotonic() + timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise wire.PeerGone(
+                    f"no usable server via {self._target!r} "
+                    f"within {timeout:.1f}s")
+            # short per-attempt timeout in fleet mode: a dead redirect
+            # target must bounce us back to the router, not eat the
+            # whole deadline
+            per = min(2.0, remaining) if self._fleet else remaining
+            try:
+                sock, ack, reader, tx, rx = wire.connect_hello(
+                    self._target, self._hello, timeout=per)
+                break
+            except (wire.HandshakeRefused, wire.PeerGone, OSError):
+                if not self._fleet:
+                    raise
+                time.sleep(0.05)
+        self._sock, self._reader = sock, reader
+        self._tx(tx)
+        self._rx(rx)
+        self.session_id = ack.session_id
+        self.slot_lo = ack.slot_lo
+        try:
+            peer = sock.getpeername()
+            self.server_address = (peer if isinstance(peer, str)
+                                   else f"{peer[0]}:{peer[1]}")
+        except OSError:
+            self.server_address = None
+        self._must_move = False
+
+    def _failover(self, why: str) -> None:
+        """Migrate to another server: re-resolve, re-HELLO, replay each
+        row's ACKED history prefix from position 0, resend unanswered
+        requests verbatim.  Deterministic by construction: the server
+        state after recovery is bitwise what the dead server had acked,
+        so the resent requests see exactly the bases they were built on."""
+        wire = self._wire
+        if not self._fleet:
+            raise wire.WireError(why)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        if self._comms is not None:
+            self._comms.record_failover()
+        real = [f for f in self._flights if not f.internal]
+        self._failing_over = True
+        deadline = time.monotonic() + self._connect_timeout
+        try:
+            while True:
+                self._flights = deque()
+                self._establish(max(0.1, deadline - time.monotonic()))
+                try:
+                    self._recover(real)
+                    return
+                except (wire.PeerGone, OSError):
+                    # the NEW server died mid-recovery: route again
+                    try:
+                        self._sock.close()
+                    except OSError:
+                        pass
+                    if time.monotonic() > deadline:
+                        raise
+        finally:
+            self._failing_over = False
+
+    def _recover(self, real: List[_Flight]) -> None:
+        """On the fresh session: synthetic replay of the acked prefixes,
+        then the unanswered real requests, all in FIFO order."""
+        wire = self._wire
+        acked = self._acked_pos
+        if self._last_history is not None:
+            zeros_pos = np.zeros(self._batch, np.int32)
+            zeros_u = np.zeros(self._batch, np.float32)
+            for p in sorted({int(x) for x in acked if x > 0}):
+                trig = acked == p
+                rid = self._internal_next
+                self._internal_next += 1
+                buf = wire.encode_request(rid, p - 1, trig, zeros_pos,
+                                          zeros_u, self._last_history)
+                self._flights.append(_Flight(rid, True, buf, p - 1,
+                                             trig.copy(),
+                                             int(trig.sum()) * p))
+                self._send_frame(buf)
+                if self._comms is not None:
+                    self._comms.record_failover_tokens(int(trig.sum()) * p)
+        for f in real:
+            self._flights.append(f)
+            self._send_frame(f.buf)
+            if self._comms is not None:
+                self._comms.record_failover_tokens(f.n_tokens, resent=True)
+
+    def _move_now(self) -> None:
+        """GOAWAY honored: pipeline is empty, leave politely and rebuild
+        on a sibling (the replay machinery is identical to a crash — the
+        only difference is the BYE)."""
+        try:
+            self._sock.settimeout(1.0)
+            bye = self._wire.encode_bye()
+            self._sock.sendall(bye)
+            self._tx(len(bye))
+        except OSError:
+            pass
+        self._failover("server draining")
 
     # -- socket pump ---------------------------------------------------------
-    def _handshake(self):
-        wire = self._wire
-        self._sock.settimeout(None)
-        while True:
-            data = self._sock.recv(1 << 16)
-            if not data:
-                raise wire.WireError("server closed during handshake")
-            self._rx(len(data))
-            for p in self._reader.feed(data):
-                msg = wire.decode(p)
-                if isinstance(msg, wire.Error):
-                    raise wire.WireError(f"server: {msg.message}")
-                if isinstance(msg, wire.HelloAck):
-                    return msg
-                raise wire.WireError(f"unexpected handshake reply {msg}")
-
     def _to_reply(self, msg) -> CatchupReply:
         now = time.monotonic()
         disp = self._dispatch_wall.pop(msg.req_id, now)
@@ -444,12 +599,32 @@ class SocketWorker(ServerWorker):
                             np.asarray(msg.v), np.asarray(msg.fhat),
                             msg.server_time_s, wall_ready=now)
 
+    def _accept_reply(self, msg) -> bool:
+        """Match a REPLY against the head of the flight queue.  Anything
+        else — a duplicated frame, a stale reply racing a reconnect — is
+        dropped here so the Dispatcher's FIFO assert never fires.
+        Returns True when a REAL (engine-visible) reply landed."""
+        if not self._flights or self._flights[0].req_id != msg.req_id:
+            return False
+        f = self._flights.popleft()
+        self._acked_pos = np.where(f.triggered, f.t + 1,
+                                   self._acked_pos).astype(np.int32)
+        if f.internal:
+            return False
+        self._replies.append(self._to_reply(msg))
+        return True
+
     def _pump(self, block: bool) -> None:
         """Drain the socket into ``self._replies``.  Non-blocking drains
-        whatever the kernel has; blocking returns once >= 1 reply landed."""
+        whatever the kernel has; blocking returns once >= 1 reply landed.
+        In fleet mode a dead connection triggers failover instead of
+        raising, and a GOAWAY schedules a migration for when the
+        pipeline is empty."""
         wire = self._wire
         got = False
         while True:
+            if self._must_move and not self._flights:
+                self._move_now()
             self._sock.settimeout(None if (block and not got) else 0.0)
             try:
                 data = self._sock.recv(1 << 16)
@@ -457,24 +632,42 @@ class SocketWorker(ServerWorker):
                 return
             except InterruptedError:
                 continue
+            except OSError as e:
+                self._failover(f"connection lost: {e}")
+                continue
             if not data:
-                raise wire.WireError("server closed connection")
+                self._failover("server closed connection")
+                continue
             self._rx(len(data))
             for p in self._reader.feed(data):
                 msg = wire.decode(p)
                 if isinstance(msg, wire.Error):
                     raise wire.WireError(f"server: {msg.message}")
-                if isinstance(msg, wire.WireReply):
-                    self._replies.append(self._to_reply(msg))
-                    got = True
+                if isinstance(msg, wire.GoAway):
+                    self._must_move = True
+                elif isinstance(msg, wire.WireReply):
+                    got |= self._accept_reply(msg)
 
     # -- ServerWorker API ----------------------------------------------------
     def dispatch(self, req: CatchupRequest) -> None:
+        if self._must_move and not self._flights:
+            self._move_now()
+        hist = np.asarray(req.history)
+        self._last_history = hist
+        trig = np.asarray(req.triggered, bool)
+        pos = np.asarray(req.server_pos, np.int32)
+        n_tok = int(np.where(trig, int(req.t) + 1 - pos, 0).sum())
         buf = self._wire.encode_request(
-            req.req_id, int(req.t), req.triggered, req.server_pos,
-            np.asarray(req.u, np.float32), np.asarray(req.history))
+            req.req_id, int(req.t), trig, pos,
+            np.asarray(req.u, np.float32), hist)
         self._dispatch_wall[req.req_id] = time.monotonic()
-        self._send_frame(buf)
+        self._flights.append(_Flight(req.req_id, False, buf, int(req.t),
+                                     trig.copy(), n_tok))
+        try:
+            self._send_frame(buf)
+        except OSError as e:
+            # the flight is queued: failover re-establishes and resends
+            self._failover(f"send failed: {e}")
 
     def poll(self) -> List[CatchupReply]:
         self._pump(block=False)
@@ -504,12 +697,24 @@ class SocketWorker(ServerWorker):
         socket is FIFO, so the reset lands before any later REQUEST that
         includes the slot.  The caller (engine) drains the pipeline
         first, so no earlier request is still in flight."""
-        self._send_frame(self._wire.encode_attach(slot))
+        if self._must_move and not self._flights:
+            self._move_now()
+        self._acked_pos[slot] = 0  # the new tenant's history starts cold
+        try:
+            self._send_frame(self._wire.encode_attach(slot))
+        except OSError as e:
+            # a post-failover lease is freshly zeroed: the reset the
+            # ATTACH asked for has already happened on the new server
+            self._failover(f"send failed: {e}")
 
     def detach_slot(self, slot: int) -> None:
         """Tell the server the stream in row ``slot`` departed (the row
         is zeroed server-side as hygiene; ATTACH re-zeroes on reuse)."""
-        self._send_frame(self._wire.encode_detach(slot))
+        self._acked_pos[slot] = 0
+        try:
+            self._send_frame(self._wire.encode_detach(slot))
+        except OSError as e:
+            self._failover(f"send failed: {e}")
 
     def close(self) -> None:
         if self._closed:

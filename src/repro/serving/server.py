@@ -72,6 +72,7 @@ from repro.core import decomposition as deco
 from repro.serving import wire
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import cache_batch_axes, zero_cache_rows
+from repro.serving.tracker import Histogram, Tracker
 
 
 @dataclass
@@ -99,7 +100,9 @@ class CorrectionServer:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 16,
                  max_len: int = 128, uds: Optional[str] = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 coalesce: bool = True, mesh: Optional[str] = None):
+                 coalesce: bool = True, mesh: Optional[str] = None,
+                 tracker: Optional[Tracker] = None,
+                 stats_interval_s: float = 0.5):
         self.cfg, self.m = cfg, cfg.monitor
         self.slots, self.max_len = int(slots), int(max_len)
         self.coalesce = bool(coalesce)   # server-wide kill switch
@@ -134,10 +137,37 @@ class CorrectionServer:
         self._sessions: Dict[socket.socket, Session] = {}
         self._free: List[Tuple[int, int]] = [(0, self.slots)]  # [lo, hi)
         self._next_sid = 1
-        self._pending: List[Tuple[Session, wire.WireRequest]] = []
+        self._pending: List[Tuple[Session, wire.WireRequest, float]] = []
         self.stats = {"requests": 0, "replays": 0, "coalesced": 0,
                       "sessions": 0, "bytes_rx": 0, "bytes_tx": 0,
-                      "attaches": 0, "detaches": 0, "defrags": 0}
+                      "attaches": 0, "detaches": 0, "defrags": 0,
+                      "refused_draining": 0}
+
+        # -- observability (serving/tracker.py) -------------------------------
+        # ``tracker`` turns the one-shot SIGTERM stats print into a live
+        # surface: serve_forever logs a full snapshot every
+        # ``stats_interval_s`` — with a JsonFileTracker that IS the fleet
+        # heartbeat the supervisor scrapes for load + liveness.
+        self.tracker = tracker
+        self.stats_interval_s = float(stats_interval_s)
+        self._last_stats_log = 0.0
+        self.hist = {
+            # replay compute time per coalesced group (seconds)
+            "replay_s": Histogram(1e-5, 60.0),
+            # requests merged per replay (the coalescing win)
+            "coalesce_width": Histogram(1.0, 4096.0),
+            # request arrival -> reply enqueued, server-side (seconds)
+            "turnaround_s": Histogram(1e-5, 60.0),
+        }
+
+        # -- drain (fleet lifecycle) ------------------------------------------
+        # request_drain() is signal-safe (launch/server.py maps SIGUSR1 to
+        # it); the reactor applies it on its own thread at the next tick:
+        # GOAWAY to every leased session, ERROR to new HELLOs.  Sessions
+        # finish their in-flight requests, BYE, and re-HELLO elsewhere —
+        # zero streams dropped (tests/test_fleet.py::test_drain_*).
+        self.draining = False
+        self._drain_req = threading.Event()
 
         # -- listener ---------------------------------------------------------
         self.uds = uds
@@ -156,6 +186,50 @@ class CorrectionServer:
         self._sel = selectors.DefaultSelector()
         self._sel.register(self._listener, selectors.EVENT_READ, "accept")
         self._closed = False
+
+    # -- observability / fleet surface ---------------------------------------
+    def leased_rows(self) -> int:
+        """Super-batch rows currently leased — the routing load signal."""
+        return self.slots - sum(h - l for l, h in self._free)
+
+    def sessions_live(self) -> int:
+        return sum(1 for s in self._sessions.values() if s.lo >= 0)
+
+    def stats_snapshot(self) -> Dict[str, object]:
+        """One scrapeable heartbeat record: identity, load, health, and
+        the counter/histogram state.  This dict is what JsonFileTracker
+        writes and what ``FleetSupervisor`` reads."""
+        snap: Dict[str, object] = {
+            "ts": time.time(),
+            "address": self.address,
+            "slots": self.slots,
+            "leased_rows": self.leased_rows(),
+            "sessions_live": self.sessions_live(),
+            "fragmentation": self.fragmentation(),
+            "draining": self.draining,
+        }
+        snap.update(self.stats)
+        for name, h in self.hist.items():
+            for k, val in h.summary().items():
+                snap[f"{name}_{k}"] = val
+        return snap
+
+    # -- drain (fleet lifecycle) ---------------------------------------------
+    def request_drain(self) -> None:
+        """Ask the reactor to start draining (safe from signal handlers
+        and other threads; applied at the next ``serve_tick``)."""
+        self._drain_req.set()
+
+    def start_drain(self) -> None:
+        """Stop taking work: GOAWAY every leased session, refuse new
+        HELLOs.  In-flight requests still complete — the client decides
+        when its pipeline is empty and moves."""
+        if self.draining:
+            return
+        self.draining = True
+        for sess in list(self._sessions.values()):
+            if sess.lo >= 0:
+                self._send(sess, wire.encode_goaway("draining"))
 
     # -- slot allocation -----------------------------------------------------
     def _alloc(self, n: int) -> int:
@@ -280,7 +354,7 @@ class CorrectionServer:
             # tenants — mark the lease gone
             sess.lo = -1
         self._sessions.pop(sess.conn, None)
-        self._pending = [(s, r) for s, r in self._pending if s is not sess]
+        self._pending = [p for p in self._pending if p[0] is not sess]
         # BYE/disconnect defrag: keep the freed rows one contiguous tail.
         # Deferred while catch-up requests are queued — the compaction
         # permutes the whole super-batch cache on the reactor thread, and
@@ -335,6 +409,13 @@ class CorrectionServer:
     # -- protocol ------------------------------------------------------------
     def _handle(self, sess: Session, msg: wire.Message) -> None:
         if isinstance(msg, wire.Hello):
+            if self.draining:
+                # a REFUSAL, not a death: the client sees HandshakeRefused
+                # and tries a sibling (the router stopped advertising us)
+                self.stats["refused_draining"] += 1
+                self._send(sess, wire.encode_error(
+                    "draining: no new sessions"))
+                return
             if sess.lo >= 0:
                 self._send(sess, wire.encode_error("duplicate HELLO"))
                 return
@@ -378,7 +459,7 @@ class CorrectionServer:
                 self._send(sess, wire.encode_error(bad))
                 self._drop(sess)
                 return
-            self._pending.append((sess, msg))
+            self._pending.append((sess, msg, time.monotonic()))
         elif isinstance(msg, (wire.Attach, wire.Detach)):
             # slot-pool churn: one row of THIS session's lease turns over.
             # The client drains its pipeline before churning, so no
@@ -431,7 +512,8 @@ class CorrectionServer:
         return None
 
     # -- the replay core -----------------------------------------------------
-    def _replay(self, group: List[Tuple[Session, wire.WireRequest]]) -> None:
+    def _replay(self, group: List[Tuple[Session, wire.WireRequest, float]]
+                ) -> None:
         """One masked catch-up over the union of the group's requests,
         then one reply per request (arrival order)."""
         S = self.slots
@@ -439,7 +521,7 @@ class CorrectionServer:
         pos = np.zeros(S, np.int32)
         tvec = np.zeros(S, np.int32)
         uvec = np.zeros(S, np.float32)
-        for sess, req in group:
+        for sess, req, _ in group:
             lengths = req.backlog_lengths()
             off = 0
             for i in np.flatnonzero(req.triggered):
@@ -469,7 +551,11 @@ class CorrectionServer:
         self.stats["requests"] += len(group)
         if len(group) > 1:
             self.stats["coalesced"] += len(group) - 1
-        for sess, req in group:
+        self.hist["replay_s"].observe(max(dt, 1e-9))
+        self.hist["coalesce_width"].observe(len(group))
+        now = time.monotonic()
+        for sess, req, arrived in group:
+            self.hist["turnaround_s"].observe(max(now - arrived, 1e-9))
             vi = v_np[sess.lo:sess.hi]
             fhat = np.asarray(self._fuse(jnp.asarray(req.u),
                                          jnp.asarray(vi),
@@ -491,6 +577,8 @@ class CorrectionServer:
 
     # -- loop ----------------------------------------------------------------
     def serve_tick(self, timeout: float = 0.001) -> None:
+        if self._drain_req.is_set() and not self.draining:
+            self.start_drain()
         for key, mask in self._sel.select(timeout):
             if key.data == "accept":
                 self._accept()
@@ -513,6 +601,15 @@ class CorrectionServer:
         idle_since: Optional[float] = None
         while stop is None or not stop.is_set():
             self.serve_tick(poll_s)
+            if self.tracker is not None:
+                now = time.monotonic()
+                if now - self._last_stats_log >= self.stats_interval_s:
+                    self._last_stats_log = now
+                    self.tracker.log(self.stats_snapshot())
+            # a drained server with no sessions left has nothing to do:
+            # exit so the supervisor can reap it without a kill
+            if self.draining and not self._sessions:
+                return
             if idle_exit_s is not None:
                 if self._sessions or self.stats["sessions"] == 0:
                     idle_since = None
@@ -533,6 +630,11 @@ class CorrectionServer:
             pass
         self._listener.close()
         self._sel.close()
+        if self.tracker is not None:
+            try:
+                self.tracker.finish()
+            except OSError:
+                pass
         if self.uds is not None:
             import os
             try:

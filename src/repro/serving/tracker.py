@@ -1,0 +1,225 @@
+"""Metrics trackers for the serving stack (levanter-style composite).
+
+The correction server used to print its lease/byte counters once, on
+SIGTERM, to stderr — useless for a supervisor that needs to know *now*
+which server is loaded and which is dead.  This module turns that dump
+into a pluggable, composable surface:
+
+  * ``Tracker`` — the tiny interface: ``log(metrics)`` for periodic
+    snapshots, ``log_summary(metrics)`` for end-of-life totals.
+  * ``JsonFileTracker`` — atomically rewrites one JSON file per call
+    (tmp + ``os.replace``), so a reader never sees a torn write.  This
+    file IS the fleet heartbeat channel: the supervisor scrapes it for
+    ``leased_rows`` (routing load) and ``ts`` (liveness deadline).
+  * ``CompositeTracker`` — fan-out to N trackers, so one server can
+    heartbeat to a file AND log to stderr AND accumulate in-memory.
+  * ``Histogram`` — fixed log-spaced buckets for replay latency /
+    coalesce width / RTT, cheap enough to observe() on the reactor tick.
+
+``read_stats(path)`` is the scrape side: tolerant of a missing or
+half-born file (returns ``None`` rather than raising), because a
+heartbeat reader must never crash on a writer mid-spawn.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+
+def _jsonable(obj: Any) -> Any:
+    """Best-effort conversion for numpy scalars/arrays inside metrics."""
+    if hasattr(obj, "item") and not isinstance(obj, (str, bytes)):
+        try:
+            return obj.item()
+        except (TypeError, ValueError):
+            pass
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    return str(obj)
+
+
+class Tracker:
+    """Interface: periodic ``log`` snapshots plus a final ``log_summary``."""
+
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        raise NotImplementedError
+
+    def log_summary(self, metrics: Dict[str, Any]) -> None:
+        # By default a summary is just a final log.
+        self.log(metrics)
+
+    def finish(self) -> None:
+        pass
+
+
+class NoopTracker(Tracker):
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        pass
+
+
+class LogTracker(Tracker):
+    """Writes one ``key=value`` line per call to a stream (stderr)."""
+
+    def __init__(self, stream=None, prefix: str = "tracker"):
+        self._stream = stream if stream is not None else sys.stderr
+        self._prefix = prefix
+
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        parts = [f"{k}={metrics[k]}" for k in sorted(metrics)]
+        head = self._prefix if step is None else f"{self._prefix}[{step}]"
+        print(f"{head} " + " ".join(parts), file=self._stream, flush=True)
+
+
+class InMemoryTracker(Tracker):
+    """Keeps every snapshot; ``latest``/``summary`` for tests and the
+    supervisor's in-process (thread-backend) scrape path."""
+
+    def __init__(self):
+        self.records: List[Dict[str, Any]] = []
+        self.summary: Dict[str, Any] = {}
+
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        rec = dict(metrics)
+        if step is not None:
+            rec["step"] = step
+        self.records.append(rec)
+
+    def log_summary(self, metrics: Dict[str, Any]) -> None:
+        self.summary = dict(metrics)
+
+    @property
+    def latest(self) -> Optional[Dict[str, Any]]:
+        return self.records[-1] if self.records else None
+
+
+class JsonFileTracker(Tracker):
+    """Atomic whole-file JSON heartbeat: each ``log`` replaces the file.
+
+    The write goes to a tempfile in the same directory and lands with
+    ``os.replace`` so a concurrent ``read_stats`` sees either the old
+    snapshot or the new one, never a prefix of the new one.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        rec = dict(metrics)
+        if step is not None:
+            rec["step"] = step
+        rec.setdefault("ts", time.time())
+        d = os.path.dirname(self.path) or "."
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".stats-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(rec, fh, default=_jsonable)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def finish(self) -> None:
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+
+class CompositeTracker(Tracker):
+    """Fan-out: every call goes to every child, in order."""
+
+    def __init__(self, trackers: Sequence[Tracker] = ()):
+        self.trackers = list(trackers)
+
+    def add(self, tracker: Tracker) -> None:
+        self.trackers.append(tracker)
+
+    def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
+            ) -> None:
+        for t in self.trackers:
+            t.log(metrics, step=step)
+
+    def log_summary(self, metrics: Dict[str, Any]) -> None:
+        for t in self.trackers:
+            t.log_summary(metrics)
+
+    def finish(self) -> None:
+        for t in self.trackers:
+            t.finish()
+
+
+class Histogram:
+    """Fixed log-spaced buckets over ``[lo, hi]``; O(log n) observe.
+
+    Summaries expose count/mean/max plus approximate p50/p99 from the
+    bucket midpoints — enough resolution for replay-latency and
+    coalesce-width dashboards without keeping raw samples.
+    """
+
+    def __init__(self, lo: float, hi: float, n_buckets: int = 24):
+        assert 0 < lo < hi and n_buckets >= 2
+        step = (math.log(hi) - math.log(lo)) / (n_buckets - 1)
+        self.edges = [math.exp(math.log(lo) + i * step)
+                      for i in range(n_buckets)]
+        self.counts = [0] * (n_buckets + 1)
+        self.total = 0.0
+        self.n = 0
+        self.vmax = 0.0
+
+    def observe(self, x: float) -> None:
+        self.n += 1
+        self.total += x
+        if x > self.vmax:
+            self.vmax = x
+        import bisect
+        self.counts[bisect.bisect_left(self.edges, x)] += 1
+
+    def _quantile(self, q: float) -> float:
+        if self.n == 0:
+            return 0.0
+        target = q * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target:
+                if i == 0:
+                    return min(self.edges[0], self.vmax)
+                if i >= len(self.edges):
+                    return self.vmax
+                return min(math.sqrt(self.edges[i - 1] * self.edges[i]),
+                           self.vmax)
+        return self.vmax
+
+    def summary(self) -> Dict[str, float]:
+        mean = self.total / self.n if self.n else 0.0
+        return {"n": self.n, "mean": mean, "max": self.vmax,
+                "p50": self._quantile(0.5), "p99": self._quantile(0.99)}
+
+
+def read_stats(path: str) -> Optional[Dict[str, Any]]:
+    """Scrape one ``JsonFileTracker`` heartbeat; ``None`` if unreadable.
+
+    Missing file, torn content, or a decode error all mean "no fresh
+    heartbeat" to the caller — the supervisor's deadline logic handles
+    staleness, this function only has to never raise.
+    """
+    try:
+        with open(path, "r") as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None

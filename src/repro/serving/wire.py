@@ -28,7 +28,7 @@ Design constraints (the reason this module exists, rather than pickle):
 
 Frame payload layout (all little-endian)::
 
-    u16 magic (0xC0AB)  | u8 version (2) | u8 msg_type | body
+    u16 magic (0xC0AB)  | u8 version (3) | u8 msg_type | body
 
 Arrays are encoded as ``u8 dtype_code | u8 ndim | u32 dims... | raw``.
 See ``docs/transport.md`` for the full wire-format table.
@@ -36,8 +36,12 @@ See ``docs/transport.md`` for the full wire-format table.
 Version history: v2 added the slot-pool churn frames ATTACH/DETACH
 (``MonitorSession.attach``/``detach`` over the wire: the server zeroes
 and re-leases a single super-batch row without disturbing co-resident
-clients).  Version mismatches are rejected loudly on BOTH sides — a v1
-peer gets an ERROR frame naming the versions, never silent
+clients).  v3 added the fleet-control frames REDIRECT (a router answers
+a HELLO with the address of the least-loaded live server — the client
+re-HELLOs there) and GOAWAY (a draining server asks its sessions to
+finish in-flight work and move to a sibling; see ``serving/fleet.py``
+and docs/fleet.md).  Version mismatches are rejected loudly on BOTH
+sides — a v1 peer gets an ERROR frame naming the versions, never silent
 misinterpretation.
 """
 from __future__ import annotations
@@ -52,7 +56,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 MAGIC = 0xC0AB
-VERSION = 2  # v2: ATTACH/DETACH slot-pool churn frames
+VERSION = 3  # v3: REDIRECT/GOAWAY fleet-control frames
 
 MSG_HELLO = 1
 MSG_HELLO_ACK = 2
@@ -62,6 +66,8 @@ MSG_BYE = 5
 MSG_ERROR = 6
 MSG_ATTACH = 7
 MSG_DETACH = 8
+MSG_REDIRECT = 9
+MSG_GOAWAY = 10
 
 _HEADER = struct.Struct("<HBB")       # magic, version, msg_type
 _LEN = struct.Struct("<I")            # frame length prefix
@@ -76,6 +82,24 @@ _DTYPE_CODE = {d: i for i, d in enumerate(_DTYPES)}
 
 class WireError(Exception):
     """Malformed frame / protocol violation / server-reported error."""
+
+
+class HandshakeRefused(WireError):
+    """The peer ANSWERED the handshake with an ERROR frame: a deliberate
+    refusal (server full, draining, version mismatch).  Retrying the same
+    address is pointless — a fleet client should try a sibling instead.
+    ``message`` carries the server's reason verbatim."""
+
+    def __init__(self, message: str):
+        super().__init__(f"server: {message}")
+        self.message = message
+
+
+class PeerGone(WireError):
+    """The connection died MID-handshake (EOF / reset before any ACK or
+    ERROR arrived): the server crashed or was killed.  Distinct from
+    ``HandshakeRefused`` so the router/supervisor can mark the server
+    unhealthy rather than merely loaded."""
 
 
 # -- primitives --------------------------------------------------------------
@@ -208,12 +232,28 @@ class Detach:
 
 
 @dataclass
+class Redirect:
+    """Fleet routing: the peer is a router, not a server — re-HELLO at
+    ``address`` (the least-loaded live correction server)."""
+
+    address: str
+
+
+@dataclass
+class GoAway:
+    """Fleet drain: the server will take no new work; finish in-flight
+    requests, then re-HELLO elsewhere and replay (``docs/fleet.md``)."""
+
+    reason: str = "draining"
+
+
+@dataclass
 class Error:
     message: str
 
 
 Message = Union[Hello, HelloAck, WireRequest, WireReply, Bye, Attach,
-                Detach, Error]
+                Detach, Redirect, GoAway, Error]
 
 
 # -- encode ------------------------------------------------------------------
@@ -283,6 +323,14 @@ def encode_detach(slot: int) -> bytes:
     return frame(_header(MSG_DETACH) + struct.pack("<I", slot))
 
 
+def encode_redirect(address: str) -> bytes:
+    return frame(_header(MSG_REDIRECT) + _pack_str(address))
+
+
+def encode_goaway(reason: str = "draining") -> bytes:
+    return frame(_header(MSG_GOAWAY) + _pack_str(reason))
+
+
 def encode_error(message: str) -> bytes:
     return frame(_header(MSG_ERROR) + _pack_str(message))
 
@@ -339,6 +387,12 @@ def decode(payload: bytes) -> Message:
         if msg_type == MSG_DETACH:
             (slot,) = struct.unpack_from("<I", payload, off)
             return Detach(slot)
+        if msg_type == MSG_REDIRECT:
+            address, off = _unpack_str(payload, off)
+            return Redirect(address)
+        if msg_type == MSG_GOAWAY:
+            reason, off = _unpack_str(payload, off)
+            return GoAway(reason)
         if msg_type == MSG_ERROR:
             message, off = _unpack_str(payload, off)
             return Error(message)
@@ -400,3 +454,75 @@ def connect(address: str, *, timeout: Optional[float] = 20.0,
             if deadline is not None and time.monotonic() > deadline:
                 raise
             time.sleep(retry_interval)
+
+
+def connect_hello(address: str, hello: Hello, *,
+                  timeout: Optional[float] = 20.0,
+                  retry_interval: float = 0.05,
+                  ) -> Tuple[socket.socket, HelloAck, "FrameReader",
+                             int, int]:
+    """Connect AND complete the HELLO handshake, distinguishing the two
+    failure modes ``connect()`` used to conflate:
+
+    * connection refused / EOF / reset before the ACK -> the server is
+      (still) dead: keep retrying until ``timeout``, then raise
+      ``PeerGone`` (mark-unhealthy signal for a fleet client).
+    * an ERROR frame in answer to the HELLO -> the server is alive and
+      REFUSING (full / draining / version skew): raise
+      ``HandshakeRefused`` immediately — retrying the same address
+      cannot help, but a sibling server might.
+
+    Returns ``(sock, ack, reader, tx_bytes, rx_bytes)``; ``reader`` is
+    the ``FrameReader`` holding any bytes that arrived after the ACK,
+    and the byte counts cover everything this function put on / took off
+    the socket (for ``CommsMeter`` accounting by the caller).
+    """
+    payload = encode_hello(hello)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        remaining = (None if deadline is None
+                     else max(0.05, deadline - time.monotonic()))
+        try:
+            sock = connect(address, timeout=remaining,
+                           retry_interval=retry_interval)
+        except OSError as e:
+            raise PeerGone(f"connect to {address!r} failed: {e}") from e
+        tx = len(payload)
+        reader = FrameReader()
+        try:
+            sock.sendall(payload)
+            rx = 0
+            msg: Optional[Message] = None
+            while msg is None:
+                chunk = sock.recv(65536)
+                if not chunk:
+                    raise PeerGone("server closed during handshake")
+                rx += len(chunk)
+                frames = reader.feed(chunk)
+                if frames:
+                    msg = decode(frames[0])
+            if isinstance(msg, Error):
+                sock.close()
+                raise HandshakeRefused(msg.message)
+            if isinstance(msg, Redirect):
+                # one hop only: a router handing out another router is a
+                # config error, surfaced by the recursive call's types
+                sock.close()
+                return connect_hello(msg.address, hello, timeout=remaining,
+                                     retry_interval=retry_interval)
+            if not isinstance(msg, HelloAck):
+                sock.close()
+                raise WireError(f"unexpected handshake reply: {msg}")
+            return sock, msg, reader, tx, rx
+        except (PeerGone, OSError) as e:
+            # transient: the server died under us — retry until deadline
+            sock.close()
+            if deadline is not None and time.monotonic() > deadline:
+                if isinstance(e, PeerGone):
+                    raise
+                raise PeerGone(f"handshake with {address!r} failed: {e}"
+                               ) from e
+            time.sleep(retry_interval)
+        except WireError:
+            sock.close()
+            raise

@@ -1,0 +1,223 @@
+"""Fault-injection harness for the fleet tests: a ``ChaosProxy`` that
+sits on the UDS path between a ``SocketWorker`` and a correction server
+and, on command, injects the failures the failover machinery must
+survive:
+
+  * ``drop_mid_frame()``  — forward only HALF of the next server->client
+    frame, then hard-close both directions (a crash mid-write: the
+    client sees a torn frame then EOF);
+  * ``delay_next_reply(s)`` — hold the server->client stream for ``s``
+    seconds before forwarding the next REPLY (a stall; ordering is
+    preserved — the whole stream waits, frames are never reordered);
+  * ``dup_next_reply()``  — forward the next REPLY twice (a retransmit
+    bug: the duplicate must be dropped by the worker's head-of-flights
+    check, never surfaced to the Dispatcher);
+  * ``cut_all()``         — sever every live link at once.
+
+SIGKILLing a server subprocess needs no proxy — ``FleetSupervisor``
+handles (``SubprocessServer.kill`` / ``ThreadServer.kill``) are the
+kill primitive; the proxy covers the byte-level faults a kill cannot
+express deterministically.
+
+Determinism: the proxy injects NOTHING unless armed, and each command
+fires exactly once on the next matching frame — a test arms a command
+at a chosen step, so every schedule is reproducible.  ``seed`` only
+seeds the mid-frame cut point jitter.
+
+Wiring: pass ``proxy.wrap`` as ``FleetSupervisor(address_wrapper=...)``
+— every REDIRECT then advertises a proxied address, so new connections
+transparently route through the chaos path.
+"""
+from __future__ import annotations
+
+import os
+import random
+import socket
+import tempfile
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving import wire
+
+_REPLY = wire.MSG_REPLY
+
+
+class _Link:
+    """One proxied client connection: two pump threads, two sockets."""
+
+    def __init__(self, proxy: "ChaosProxy", client: socket.socket,
+                 upstream_addr: str):
+        self.proxy = proxy
+        self.client = client
+        family, target = wire.parse_address(upstream_addr)
+        self.upstream = socket.socket(family, socket.SOCK_STREAM)
+        self.upstream.connect(target)
+        self.dead = False
+        t1 = threading.Thread(target=self._pump_c2s, daemon=True)
+        t2 = threading.Thread(target=self._pump_s2c, daemon=True)
+        t1.start()
+        t2.start()
+
+    def kill(self) -> None:
+        self.dead = True
+        for s in (self.client, self.upstream):
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def _pump_c2s(self) -> None:
+        # client->server: raw passthrough (faults are injected on the
+        # reply path where the protocol state machine lives)
+        try:
+            while not self.dead:
+                data = self.client.recv(1 << 16)
+                if not data:
+                    break
+                self.upstream.sendall(data)
+        except OSError:
+            pass
+        self.kill()
+
+    def _pump_s2c(self) -> None:
+        # server->client: re-framed so commands act on whole frames;
+        # wire.frame() re-emits byte-identical framing
+        reader = wire.FrameReader()
+        try:
+            while not self.dead:
+                data = self.upstream.recv(1 << 16)
+                if not data:
+                    break
+                for payload in reader.feed(data):
+                    if not self.proxy._forward(self, payload):
+                        return
+        except (OSError, wire.WireError):
+            pass
+        self.kill()
+
+
+class ChaosProxy:
+    """Frame-aware fault-injecting proxy; see module docstring."""
+
+    def __init__(self, seed: int = 0, root: Optional[str] = None):
+        self.rng = random.Random(seed)
+        self.root = root or tempfile.mkdtemp(prefix="chaos-")
+        self._lock = threading.Lock()
+        self._cmd: Dict[str, object] = {}   # armed one-shot commands
+        self._links: List[_Link] = []
+        self._listeners: List[socket.socket] = []
+        self._wrapped: Dict[str, str] = {}  # upstream -> proxy address
+        self._closed = False
+        self.stats = {"frames": 0, "dropped_mid_frame": 0, "duplicated": 0,
+                      "delayed": 0}
+
+    # -- wiring --------------------------------------------------------------
+    def wrap(self, upstream: str) -> str:
+        """Return a proxy address piping to ``upstream`` (creating the
+        listener on first use) — the ``FleetSupervisor`` address_wrapper
+        hook."""
+        with self._lock:
+            if upstream in self._wrapped:
+                return self._wrapped[upstream]
+            path = os.path.join(self.root, f"p{len(self._wrapped)}.sock")
+            lst = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            lst.bind(path)
+            lst.listen(16)
+            self._listeners.append(lst)
+            self._wrapped[upstream] = path
+        threading.Thread(target=self._accept_loop,
+                         args=(lst, upstream), daemon=True).start()
+        return path
+
+    def _accept_loop(self, lst: socket.socket, upstream: str) -> None:
+        while not self._closed:
+            try:
+                conn, _ = lst.accept()
+            except OSError:
+                return
+            try:
+                link = _Link(self, conn, upstream)
+            except OSError:
+                conn.close()   # upstream is gone: refuse like a dead server
+                continue
+            with self._lock:
+                self._links.append(link)
+
+    # -- commands (one-shot, armed by the test at a chosen step) -------------
+    def drop_mid_frame(self) -> None:
+        with self._lock:
+            self._cmd["drop_mid_frame"] = True
+
+    def delay_next_reply(self, seconds: float) -> None:
+        with self._lock:
+            self._cmd["delay"] = float(seconds)
+
+    def dup_next_reply(self) -> None:
+        with self._lock:
+            self._cmd["dup"] = True
+
+    def cut_all(self) -> None:
+        with self._lock:
+            links, self._links = self._links, []
+        for ln in links:
+            ln.kill()
+
+    # -- the injection point -------------------------------------------------
+    def _take(self, key: str) -> Optional[object]:
+        with self._lock:
+            return self._cmd.pop(key, None)
+
+    def _forward(self, link: _Link, payload: bytes) -> bool:
+        """Forward one server->client frame, applying at most one armed
+        command.  Returns False when the link was severed."""
+        self.stats["frames"] += 1
+        buf = wire.frame(payload)
+        is_reply = len(payload) >= 4 and payload[3] == _REPLY
+        if self._take("drop_mid_frame") is not None:
+            # a torn frame then EOF — at least the length prefix, never
+            # the whole frame
+            n = max(1, min(len(buf) - 1,
+                           self.rng.randint(1, max(1, len(buf) - 1))))
+            self.stats["dropped_mid_frame"] += 1
+            try:
+                link.client.sendall(buf[:n])
+            except OSError:
+                pass
+            link.kill()
+            return False
+        if is_reply:
+            d = self._take("delay")
+            if d is not None:
+                self.stats["delayed"] += 1
+                threading.Event().wait(float(d))  # holds the whole stream
+            if self._take("dup") is not None:
+                self.stats["duplicated"] += 1
+                try:
+                    link.client.sendall(buf)
+                except OSError:
+                    link.kill()
+                    return False
+        try:
+            link.client.sendall(buf)
+        except OSError:
+            link.kill()
+            return False
+        return True
+
+    def close(self) -> None:
+        self._closed = True
+        self.cut_all()
+        for lst in self._listeners:
+            try:
+                lst.close()
+            except OSError:
+                pass
+        for path in self._wrapped.values():
+            try:
+                os.unlink(path)
+            except OSError:
+                pass

@@ -20,3 +20,11 @@ except ImportError:
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Centralized subprocess-startup deadline for every test that spawns a
+# correction server (test_wire, test_churn, test_mesh, test_fleet).  The
+# old per-test hardcoded 180 s flaked on the 2-core CI container, where a
+# cold jax import under load can exceed it; one env-overridable knob
+# beats four copies.  (launch.server.spawn_subprocess reads the same env
+# var when no explicit timeout is passed.)
+SPAWN_DEADLINE_S = float(os.environ.get("REPRO_SPAWN_DEADLINE_S", "240"))

@@ -227,10 +227,12 @@ class TestWireChurn:
 
         tmp = tempfile.mkdtemp(prefix="wire_churn_")
         uds = os.path.join(tmp, "s.sock")
+        from conftest import SPAWN_DEADLINE_S
         from repro.launch.server import spawn_subprocess
         proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
                                 slots=8, max_len=32,
-                                ready_file=os.path.join(tmp, "ready"))
+                                ready_file=os.path.join(tmp, "ready"),
+                                timeout_s=SPAWN_DEADLINE_S)
         try:
             wcfg = SessionConfig(
                 mode="async", max_staleness=2,

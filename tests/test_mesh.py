@@ -258,11 +258,12 @@ class TestShardedBitIdentity:
                                   max_len=16).session().run(stream)
         tmp = tempfile.mkdtemp(prefix="mesh_wire_")
         uds = os.path.join(tmp, "s.sock")
+        from conftest import SPAWN_DEADLINE_S
         from repro.launch.server import spawn_subprocess
         proc = spawn_subprocess(
             "paper-synthetic-serving", uds=uds, slots=16, max_len=16,
             ready_file=os.path.join(tmp, "ready"),
-            extra_args=("--mesh", "data:8"))
+            extra_args=("--mesh", "data:8"), timeout_s=SPAWN_DEADLINE_S)
         try:
             eng = CollaborativeEngine(params, cfg, batch=16, max_len=16,
                                       mesh=self.MESH)

@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import SPAWN_DEADLINE_S
 from repro.configs.paper_synthetic import SERVING
 from repro.core import decomposition as deco
 from repro.data import tokens as tok
@@ -134,15 +135,21 @@ class TestCodec:
         assert wire.decode(p) == wire.Detach(7)
         (p,) = wire.FrameReader().feed(wire.encode_error("boom"))
         assert wire.decode(p) == wire.Error("boom")
+        (p,) = wire.FrameReader().feed(wire.encode_redirect("/tmp/x.sock"))
+        assert wire.decode(p) == wire.Redirect("/tmp/x.sock")
+        (p,) = wire.FrameReader().feed(wire.encode_goaway())
+        assert wire.decode(p) == wire.GoAway("draining")
+        (p,) = wire.FrameReader().feed(wire.encode_goaway("rebalance"))
+        assert wire.decode(p) == wire.GoAway("rebalance")
 
     def test_old_protocol_version_rejected_loudly(self):
-        """The v2 bump (ATTACH/DETACH churn frames) must reject v1 peers
-        with an error NAMING both versions — never silent
+        """The v3 bump (REDIRECT/GOAWAY fleet-control frames) must reject
+        v1 peers with an error NAMING both versions — never silent
         misinterpretation of the old layout."""
-        assert wire.VERSION == 2
+        assert wire.VERSION == 3
         good = wire.FrameReader().feed(wire.encode_bye())[0]
         v1 = good[:2] + b"\x01" + good[3:]
-        with pytest.raises(wire.WireError, match="version 1.*supported 2"):
+        with pytest.raises(wire.WireError, match="version 1.*supported 3"):
             wire.decode(v1)
 
     def test_frame_reader_reassembles_any_fragmentation(self):
@@ -407,7 +414,7 @@ class TestWireLoopback:
                 msgs = [wire.decode(p) for p in rd.feed(data)]
             assert isinstance(msgs[0], wire.Error)
             assert "version 1" in msgs[0].message
-            assert "2" in msgs[0].message
+            assert "3" in msgs[0].message
         finally:
             sock.close()
         # churn frames are validated against the lease like requests
@@ -530,6 +537,98 @@ class TestCoalescing:
             srv.close()
 
 
+class TestConnectHello:
+    """Regression: the connect/handshake retry loop used to treat a
+    refused handshake and a mid-handshake EOF identically — now a
+    deliberate ERROR answer ("server full", "draining") surfaces as
+    ``HandshakeRefused`` IMMEDIATELY (the fleet client tries a sibling),
+    while a dead peer (refused connect, EOF mid-handshake) is retried
+    until the deadline and then surfaces as ``PeerGone`` (the supervisor
+    marks the server unhealthy)."""
+
+    def test_deliberate_refusal_raises_immediately(self, wire_server):
+        cfg, params, uds, srv = wire_server
+        t0 = time.monotonic()
+        with pytest.raises(wire.HandshakeRefused) as ei:
+            # way over the 8-slot pool: the server answers ERROR
+            wire.connect_hello(uds, wire.Hello(batch=100, max_len=32),
+                               timeout=30.0)
+        # refused != dead: no retry-until-deadline, and the server's
+        # reason survives verbatim on .message
+        assert time.monotonic() - t0 < 10.0
+        assert "server full" in ei.value.message
+        assert isinstance(ei.value, wire.WireError)
+
+    def test_no_listener_is_peer_gone_after_retries(self):
+        path = _uds_path("gone")  # directory exists, socket never bound
+        t0 = time.monotonic()
+        with pytest.raises(wire.PeerGone):
+            wire.connect_hello(path, wire.Hello(batch=1, max_len=8),
+                               timeout=0.6, retry_interval=0.05)
+        assert time.monotonic() - t0 >= 0.5, "must retry until deadline"
+
+    def test_mid_handshake_eof_is_peer_gone_not_refused(self):
+        # a listener that accepts and instantly closes: the client sees
+        # EOF before any ERROR frame — that is a dead peer, not a refusal
+        path = _uds_path("eof")
+        lst = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        lst.bind(path)
+        lst.listen(8)
+        accepts = []
+
+        def slam():
+            while True:
+                try:
+                    c, _ = lst.accept()
+                except OSError:
+                    return
+                accepts.append(1)
+                c.close()
+
+        th = threading.Thread(target=slam, daemon=True)
+        th.start()
+        try:
+            with pytest.raises(wire.PeerGone, match="handshake"):
+                wire.connect_hello(path, wire.Hello(batch=1, max_len=8),
+                                   timeout=0.6, retry_interval=0.05)
+            assert len(accepts) >= 2, "EOF mid-handshake must be retried"
+        finally:
+            lst.close()
+
+    def test_redirect_hop_is_followed(self, wire_server):
+        cfg, params, uds, srv = wire_server
+        # a fake router: answers any HELLO with REDIRECT to the real server
+        path = _uds_path("rtr")
+        lst = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        lst.bind(path)
+        lst.listen(8)
+
+        def router():
+            try:
+                c, _ = lst.accept()
+            except OSError:
+                return
+            rd = wire.FrameReader()
+            while not rd.feed(c.recv(1 << 16)):
+                pass
+            c.sendall(wire.encode_redirect(uds))
+            c.close()
+
+        th = threading.Thread(target=router, daemon=True)
+        th.start()
+        try:
+            sock, ack, reader, tx, rx = wire.connect_hello(
+                path, wire.Hello(batch=2, max_len=32), timeout=20.0)
+            try:
+                assert isinstance(ack, wire.HelloAck)
+                assert tx > 0 and rx > 0
+            finally:
+                sock.sendall(wire.encode_bye())
+                sock.close()
+        finally:
+            lst.close()
+
+
 class TestTwoProcessSmoke:
     """CI tier-1: a real server SUBPROCESS + one engine over a UDS."""
 
@@ -549,7 +648,7 @@ class TestTwoProcessSmoke:
             env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
             text=True)
         try:
-            deadline = time.monotonic() + 180
+            deadline = time.monotonic() + SPAWN_DEADLINE_S
             while not os.path.exists(ready):
                 assert proc.poll() is None, proc.stderr.read()[-3000:]
                 assert time.monotonic() < deadline, "server startup timeout"
