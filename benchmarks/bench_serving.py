@@ -271,6 +271,81 @@ def _bench_wire(name: str, cfg, batch: int, steps: int, csv: List[str], *,
             proc.kill()
 
 
+def _bench_trace(name: str, cfg, batch: int, steps: int, csv: List[str], *,
+                 rate: float = 0.3,
+                 staleness: int = SERVING_MAX_STALENESS) -> None:
+    """The ``--trace`` arm: ONE traced coalesced wire run (same operating
+    point as the coalesced ``_bench_wire`` arm, ``SessionConfig(trace=
+    True)``), exporting the span trace as Perfetto-loadable JSON to
+    ``results/trace_wire_b{batch}.json`` and appending a row whose
+    columns are the p50/p99 of the measured RTT and its four stages
+    (serialize / socket / queue / compute — docs/observability.md).
+    Tracing must not change the protocol: u/trigger stay bitwise vs the
+    offline scan, asserted like every other wire arm."""
+    from repro.observability import breakdown, load_trace
+    from repro.launch.server import spawn_subprocess
+
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
+    cfg = _calibrate(cfg, params, stream, batch, max_len, rate)
+    warm = 6
+
+    tmp = tempfile.mkdtemp(prefix="bench_trace_")
+    uds = os.path.join(tmp, "corr.sock")
+    proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
+                            slots=max(batch, SERVING_WIRE_SLOTS),
+                            max_len=max_len,
+                            ready_file=os.path.join(tmp, "ready"),
+                            extra_args=("--idle-exit-s", "60"))
+    try:
+        eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+        sess = eng.session(SessionConfig(
+            mode="async", max_staleness=staleness, trace=True,
+            transport=TransportSpec("wire", address=uds)))
+        sess.__enter__()
+        outs = []
+        for t in range(warm):
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
+        t0 = time.time()
+        for t in range(warm, steps):
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
+        sess.close()
+        dt = time.time() - t0
+        tps = batch * (steps - warm) / dt
+
+        res = {k: np.stack([o[k] for o in outs], 1)
+               for k in ("u", "triggered")}
+        scan = _scan(params, cfg, stream, batch, max_len)
+        assert np.array_equal(res["u"], scan["u"])
+        assert np.array_equal(res["triggered"], scan["triggered"])
+
+        out = os.path.join(os.path.dirname(__file__), "..", "results",
+                           f"trace_wire_b{batch}.json")
+        n_spans = sess.export_trace(out)
+        load_trace(out)  # the schema gate (raises on violation)
+        stats = breakdown(sess.tracer.spans())
+        cols = [f"tokens_per_sec={tps:.0f};transport=wire;coalesce=1;"
+                f"trace_spans={n_spans}"]
+        for stage in ("rtt", "serialize", "socket", "queue", "compute"):
+            s = stats.get(stage)
+            if s is not None:
+                cols.append(f"{stage}_p50_ms={s['p50_s'] * 1e3:.3f};"
+                            f"{stage}_p99_ms={s['p99_s'] * 1e3:.3f}")
+        csv.append(f"serving/{name}_wire_traced,"
+                   f"{1e6 / max(tps, 1e-9) * batch:.1f},"
+                   + ";".join(cols)
+                   + f";trace_file=results/trace_wire_b{batch}.json")
+        print(f"trace: {n_spans} spans -> {out} (load in "
+              "https://ui.perfetto.dev or chrome://tracing)", flush=True)
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
 def _bench_churn(name: str, cfg, batch: int, steps: int, csv: List[str], *,
                  rates=(0.0, 0.05, 0.1, 0.2), rate: float = 0.3,
                  seed: int = 0) -> None:
@@ -498,6 +573,16 @@ def run_wire(csv: List[str]) -> None:
         print(row, flush=True)
 
 
+def run_trace(csv: List[str]) -> None:
+    """The traced-wire row only (bench_serving --trace): Perfetto trace
+    export + the p50/p99 RTT-breakdown columns."""
+    n0 = len(csv)
+    _bench_trace("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+                 csv=csv, rate=0.3)
+    for row in csv[n0:]:
+        print(row, flush=True)
+
+
 def run_fleet(csv: List[str]) -> None:
     """The fleet rows only (routed + SIGKILL-failover arms)."""
     n0 = len(csv)
@@ -561,6 +646,12 @@ if __name__ == "__main__":
                          "routed arm and one SIGKILL-failover arm, "
                          "appending failovers/failover_tx_kb/"
                          "tokens_per_sec rows to results/bench.csv")
+    ap.add_argument("--trace", action="store_true",
+                    help="run only the traced coalesced wire bench "
+                         "(batch 64, SessionConfig(trace=True)): exports "
+                         "results/trace_wire_b64.json (Perfetto-loadable) "
+                         "and appends a row with serialize/socket/queue/"
+                         "compute p50/p99 ms columns to results/bench.csv")
     ap.add_argument("--churn", action="store_true",
                     help="run only the slot-pool churn sweep (attach/"
                          "detach rates at batch 64) and append its "
@@ -580,12 +671,14 @@ if __name__ == "__main__":
         print("MESHROW " + _mesh_child_row(*args._mesh_child), flush=True)
         sys.exit(0)
     rows: List[str] = []
-    if (args.transport == "wire" or args.churn or args.fleet
+    if (args.transport == "wire" or args.churn or args.fleet or args.trace
             or args.devices is not None):
         if args.churn:
             run_churn(rows)
         elif args.fleet:
             run_fleet(rows)
+        elif args.trace:
+            run_trace(rows)
         elif args.devices is not None:
             run_mesh_sweep(rows, args.devices)
         else:

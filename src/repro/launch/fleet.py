@@ -97,7 +97,12 @@ def main(argv=None) -> None:
                 log.log({"n_live": agg["totals"].get("n_live"),
                          "routed": agg["totals"].get("routed"),
                          "leased_rows": agg["totals"].get("leased_rows", 0),
-                         "respawns": agg["totals"].get("respawns")})
+                         "respawns": agg["totals"].get("respawns"),
+                         # fleet-wide worst-case latency percentiles
+                         # (max over live servers; None until observed)
+                         "replay_s_p99": agg["totals"].get("replay_s_p99"),
+                         "queue_wait_s_p99":
+                             agg["totals"].get("queue_wait_s_p99")})
     finally:
         agg = sup.aggregate()
         sup.close()

@@ -56,10 +56,17 @@ def run_collab(args, cfg, params) -> None:
             else TransportSpec())
     config = SessionConfig(mode=args.mode, transport=spec,
                            max_staleness=args.max_staleness,
-                           mesh=args.mesh)
+                           mesh=args.mesh, trace=args.trace is not None)
     t0 = time.time()
     with eng.session(config) as session:
         res = session.run(stream)
+        if args.trace is not None:
+            n = session.export_trace(args.trace)
+            print(f"trace: {n} spans -> {args.trace} "
+                  "(load in Perfetto / chrome://tracing)")
+            from repro.observability.report import breakdown_table
+            for line in breakdown_table(session.tracer.spans()):
+                print(line)
     dt = (time.time() - t0) / S
     print(f"{args.mode} collab engine: {S} steps x batch {B}:  "
           f"{dt * 1e3:.1f} ms/step  ({B / dt:.1f} tok/s)")
@@ -104,7 +111,14 @@ def main() -> None:
                     help="collab engine only: mesh-shard per-stream state, "
                          "e.g. 'data:8' (batch must divide; see "
                          "docs/sharding.md)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="collab engine only: trace the session "
+                         "(SessionConfig(trace=True)) and export Perfetto "
+                         "JSON to FILE, printing the critical-path "
+                         "breakdown (docs/observability.md)")
     args = ap.parse_args()
+    if args.trace is not None and args.engine != "collab":
+        ap.error("--trace serves the collab engine (use --engine collab)")
 
     if args.mesh is not None:
         if args.engine != "collab":

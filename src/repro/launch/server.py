@@ -143,6 +143,9 @@ def main(argv=None) -> None:
                          "with a stats snapshot every --stats-interval-s "
                          "(the fleet supervisor's load/liveness channel)")
     ap.add_argument("--stats-interval-s", type=float, default=0.5)
+    ap.add_argument("--trace-file", default=None,
+                    help="record server-side spans (queue wait / replay) "
+                         "and export Perfetto JSON here on shutdown")
     args = ap.parse_args(argv)
 
     if (args.uds is None) == (args.port is None):
@@ -165,12 +168,16 @@ def main(argv=None) -> None:
     from repro.serving.tracker import JsonFileTracker
     tracker = (JsonFileTracker(args.stats_file)
                if args.stats_file else None)
+    tracer = None
+    if args.trace_file:
+        from repro.observability import Tracer
+        tracer = Tracer()
     srv = CorrectionServer(cfg, params, slots=args.slots,
                            max_len=args.max_len, uds=args.uds,
                            host=args.host,
                            port=args.port if args.port is not None else 0,
                            coalesce=not args.no_coalesce, mesh=args.mesh,
-                           tracker=tracker,
+                           tracker=tracker, tracer=tracer,
                            stats_interval_s=args.stats_interval_s)
     print(f"correction server: arch={args.arch} slots={args.slots} "
           f"max_len={args.max_len} coalesce={not args.no_coalesce} "
@@ -197,6 +204,9 @@ def main(argv=None) -> None:
         st = srv.stats
         if tracker is not None:
             tracker.log_summary(srv.stats_snapshot())
+        if tracer is not None:
+            n = tracer.export(args.trace_file)
+            print(f"trace: {n} spans -> {args.trace_file}", flush=True)
         print(f"served {st['sessions']} sessions, {st['requests']} requests "
               f"in {st['replays']} replays ({st['coalesced']} coalesced), "
               f"{st['attaches']} attaches / {st['detaches']} detaches, "

@@ -162,6 +162,14 @@ class SessionConfig:
                      mismatches).
     capacity       — scan mode's static correction capacity.
     monitor_n      — Eq.-8 truncation override for the serving u head.
+    trace          — span tracing (``docs/observability.md``): the
+                     session installs a ``repro.observability.Tracer``
+                     on the engine for its lifetime; read it via
+                     ``MonitorSession.tracer`` / ``export_trace``.
+                     Default OFF: the disabled path is a flag check per
+                     instrumentation site, and traced sessions are
+                     bitwise identical to untraced ones (tested).
+    trace_capacity — span ring bound when tracing (oldest dropped).
     """
 
     mode: str = "sync"
@@ -172,6 +180,8 @@ class SessionConfig:
     capacity: Optional[int] = None
     monitor_n: Optional[int] = None
     mesh: Optional[Any] = None  # MeshSpec | "data:8" | None (unsharded)
+    trace: bool = False
+    trace_capacity: int = 65536
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -182,6 +192,8 @@ class SessionConfig:
                                TransportSpec.parse(self.transport))
         if self.max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
+        if self.trace_capacity <= 0:
+            raise ValueError("trace_capacity must be >= 1")
         if self.mode == "scan" and self.transport != TransportSpec():
             raise ValueError("scan mode is offline: it takes no transport")
         if self.mesh is not None:
@@ -311,6 +323,14 @@ class MonitorSession:
             # same mesh; loud on a mismatch.
             from repro.serving.mesh import ensure_sharded
             ensure_sharded(self._engine, self.config.mesh)
+        if self.config.trace:
+            # install the tracer BEFORE any worker is built so the
+            # dispatcher / socket worker capture it at construction
+            from repro.observability import Tracer
+            self._engine._tracer = Tracer(self.config.trace_capacity)
+        else:
+            # don't inherit a previous session's tracer on a reused engine
+            self._engine._tracer = None
         if self.config.needs_worker:
             spec = self.config.transport
             self._engine._start_async(
@@ -471,6 +491,37 @@ class MonitorSession:
     def report(self) -> Dict[str, Any]:
         """The engine's communication/overlap report (see CommsMeter)."""
         return self._engine.comms.report()
+
+    # -- observability --------------------------------------------------------
+    @property
+    def tracer(self):
+        """The session's span tracer (``SessionConfig(trace=True)``), or
+        ``None`` when tracing is off."""
+        return self._engine._tracer
+
+    def export_trace(self, path: str) -> int:
+        """Write the session's spans as Chrome trace-event / Perfetto
+        JSON; returns the span count.  Requires ``trace=True``."""
+        tr = self._engine._tracer
+        if tr is None:
+            raise RuntimeError(
+                "tracing is off: open the session with "
+                "SessionConfig(trace=True)")
+        return tr.export(path)
+
+    def metrics(self) -> Dict[str, Any]:
+        """One flat metrics snapshot for the whole session: the engine's
+        registry (wire RTT breakdown histograms as
+        ``rtt_*_s_{n,mean,max,p50,p99}``), the flattened ``CommsMeter``
+        report under ``comms/...`` keys, and — when tracing — the
+        tracer's ring stats under ``trace/...``."""
+        from repro.observability import flatten
+        snap = self._engine.metrics.snapshot()
+        snap.update(flatten(self._engine.comms.report(), "comms"))
+        tr = self._engine._tracer
+        if tr is not None:
+            snap.update(flatten(tr.stats(), "trace"))
+        return snap
 
     def arm_recompile_guard(self, *, track_global: bool = True,
                             warm_only: bool = False):

@@ -428,7 +428,8 @@ class SocketWorker(ServerWorker):
 
     def __init__(self, cache, *, address: str, batch: int, max_len: int,
                  tok_tail: Tuple[int, ...] = (), coalesce: bool = True,
-                 comms=None, connect_timeout: float = 60.0,
+                 comms=None, metrics=None, tracer=None,
+                 connect_timeout: float = 60.0,
                  client: str = "edge"):
         from repro.serving import wire  # local import: keep module light
 
@@ -438,6 +439,12 @@ class SocketWorker(ServerWorker):
         self.cache = cache       # stays cold locally (see class docstring)
         self._closed = False
         self._comms = comms
+        # observability (both optional): ``metrics`` is the engine's
+        # MetricsRegistry — the measured RTT breakdown (serialize / socket
+        # / queue / compute, via the v4 REPLY timing payload) lands there;
+        # ``tracer`` additionally records wire/server spans per request
+        self._metrics = metrics
+        self._tracer = tracer
         self._batch = int(batch)
         self._hello = wire.Hello(batch, max_len, tuple(tok_tail), coalesce,
                                  client)
@@ -446,7 +453,9 @@ class SocketWorker(ServerWorker):
             else address
         self._connect_timeout = connect_timeout
         self._replies: deque = deque()
-        self._dispatch_wall: Dict[int, float] = {}
+        # req_id -> (dispatch wall time, serialize duration): the client
+        # half of the per-request RTT breakdown
+        self._dispatch_wall: Dict[int, Tuple[float, float]] = {}
         # -- failover state (fleet mode; harmless bookkeeping otherwise) -----
         self._flights: "deque[_Flight]" = deque()
         self._acked_pos = np.zeros(self._batch, np.int32)
@@ -592,12 +601,49 @@ class SocketWorker(ServerWorker):
     # -- socket pump ---------------------------------------------------------
     def _to_reply(self, msg) -> CatchupReply:
         now = time.monotonic()
-        disp = self._dispatch_wall.pop(msg.req_id, now)
+        disp, ser = self._dispatch_wall.pop(msg.req_id, (now, 0.0))
+        rtt = now - disp
         if self._comms is not None:
-            self._comms.record_wire_rtt(now - disp)
+            self._comms.record_wire_rtt(rtt)
+        if self._metrics is not None or self._tracer is not None:
+            self._breakdown(msg, now, disp, ser, rtt)
         return CatchupReply(msg.req_id, msg.t, np.asarray(msg.triggered),
                             np.asarray(msg.v), np.asarray(msg.fhat),
                             msg.server_time_s, wall_ready=now)
+
+    def _breakdown(self, msg, now: float, disp: float, ser: float,
+                   rtt: float) -> None:
+        """Split one measured RTT into serialize / socket / queue /
+        compute using the REPLY's duration-only timing fields, observe
+        the pieces into the registry, and (when tracing) synthesize the
+        server-side spans — anchored BACKWARDS from reply arrival, since
+        the server reported durations, not timestamps (no clock sync)."""
+        compute = max(msg.server_time_s, 0.0)
+        queue = msg.queue_s if msg.queue_s >= 0 else None   # None: v3 peer
+        if self._metrics is not None:
+            m = self._metrics
+            m.observe("rtt_s", max(rtt, 1e-9))
+            m.observe("rtt_serialize_s", max(ser, 1e-9))
+            m.observe("rtt_compute_s", max(compute, 1e-9))
+            if queue is not None:
+                m.observe("rtt_queue_s", max(queue, 1e-9))
+                m.observe("rtt_socket_s",
+                          max(rtt - queue - compute, 1e-9))
+        if self._tracer is not None:
+            tr = self._tracer
+            tr.add("wire.request", "wire", disp, rtt, track="wire",
+                   req_id=msg.req_id, coalesced=msg.coalesced)
+            # compute ends at arrival; queue precedes compute; the rest
+            # of the gap after dispatch is both socket directions
+            tr.add("server.catchup", "server", now - compute, compute,
+                   track="server", req_id=msg.req_id,
+                   coalesced=msg.coalesced)
+            if queue is not None:
+                tr.add("server.queue", "server", now - compute - queue,
+                       queue, track="server", req_id=msg.req_id)
+                tr.add("wire.socket", "wire", disp,
+                       max(rtt - queue - compute, 0.0), track="wire",
+                       req_id=msg.req_id)
 
     def _accept_reply(self, msg) -> bool:
         """Match a REPLY against the head of the flight queue.  Anything
@@ -657,10 +703,16 @@ class SocketWorker(ServerWorker):
         trig = np.asarray(req.triggered, bool)
         pos = np.asarray(req.server_pos, np.int32)
         n_tok = int(np.where(trig, int(req.t) + 1 - pos, 0).sum())
+        t_enc = time.monotonic()
         buf = self._wire.encode_request(
             req.req_id, int(req.t), trig, pos,
             np.asarray(req.u, np.float32), hist)
-        self._dispatch_wall[req.req_id] = time.monotonic()
+        t_send = time.monotonic()
+        self._dispatch_wall[req.req_id] = (t_send, t_send - t_enc)
+        if self._tracer is not None:
+            self._tracer.add("wire.encode", "wire", t_enc, t_send - t_enc,
+                             track="wire", req_id=req.req_id,
+                             bytes=len(buf), tokens=n_tok)
         self._flights.append(_Flight(req.req_id, False, buf, int(req.t),
                                      trig.copy(), n_tok))
         try:
@@ -785,12 +837,13 @@ class Dispatcher:
     """
 
     def __init__(self, worker: ServerWorker, *, max_staleness: int = 1,
-                 comms=None):
+                 comms=None, tracer=None):
         if max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
         self.worker = worker
         self.max_staleness = int(max_staleness)
         self.comms = comms
+        self.tracer = tracer   # optional span tracer (edge.stall spans)
         self._inflight: deque = deque()   # CatchupRequest, FIFO
         self._held: deque = deque()       # arrived, not yet merge-eligible
         self._next_id = 0
@@ -831,9 +884,13 @@ class Dispatcher:
         while (self._inflight
                and now_t - self._inflight[0].step_t >= self.max_staleness):
             t0 = time.monotonic()
-            replies = self.worker.wait(self._inflight[0].req_id)
+            head = self._inflight[0].req_id
+            replies = self.worker.wait(head)
             if self.comms is not None:
                 self.comms.record_stall(time.monotonic() - t0)
+            if self.tracer is not None:
+                self.tracer.done("edge.stall", "edge", t0,
+                                 req_id=head, step=now_t)
             self._arrived(replies)
         min_age = 1 if self.max_staleness > 0 else 0
         out: List[CatchupReply] = []
@@ -859,6 +916,8 @@ class Dispatcher:
             self._arrived(self.worker.wait(self._inflight[-1].req_id))
             if self.comms is not None:
                 self.comms.record_stall(time.monotonic() - t0)
+            if self.tracer is not None:
+                self.tracer.done("edge.stall", "edge", t0, drain=True)
         out = list(self._held)
         self._held.clear()
         if self.comms is not None:

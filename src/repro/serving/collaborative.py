@@ -98,6 +98,7 @@ from repro.core import decomposition as deco
 from repro.core.gating import CommsMeter, compact_correction
 from repro.kernels import ops
 from repro.nn.module import linear
+from repro.observability import MetricsRegistry
 from repro.serving.engine import ServeEngine, zero_cache_rows
 
 # payload: one token id (4B) + edge score (4B) per shipped token
@@ -133,6 +134,14 @@ class CollaborativeEngine:
         tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
         self._history = jnp.zeros((batch, max_len) + tok_tail, jnp.int32)
         self.comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=batch)
+        # unified metrics registry (repro/observability): always on — the
+        # wire transport feeds its measured RTT breakdown here, and
+        # MonitorSession.metrics() snapshots it.  The span tracer is OFF
+        # by default (None): SessionConfig(trace=True) installs one for
+        # the session's lifetime, and every instrumentation site below is
+        # a single `is not None` check when disabled.
+        self.metrics = MetricsRegistry()
+        self._tracer = None
         self._dispatcher = None
         self._worker = None
         self._u_head = jax.jit(self._u_head_impl)
@@ -273,6 +282,8 @@ class CollaborativeEngine:
             raise ValueError("no attached streams (empty slot pool)")
         if (pos[active] >= self.max_len).any():
             raise ValueError(f"stream longer than max_len={self.max_len}")
+        tr = self._tracer
+        t0 = tr.clock() if tr is not None else 0.0
         tokens_t = jnp.asarray(tokens_t)
         act_j = jnp.asarray(active)
         self._history = self._record_at(
@@ -290,8 +301,15 @@ class CollaborativeEngine:
             u = u_p if u is None else jnp.where(jnp.asarray(mask), u_p, u)
         if not active.all():
             u = jnp.where(act_j, u, 0.0)
+        if tr is not None:
+            tr.done("edge.decode", "edge", t0, step=self.t)
+            t1 = tr.clock()
         triggered = np.asarray(
             u > self.m.threshold - self.m.trigger_margin) & active
+        if tr is not None:
+            # the sync point: host readback of the trigger mask
+            tr.done("edge.trigger", "edge", t1, step=self.t,
+                    n_triggered=int(triggered.sum()))
         return u, triggered
 
     def _check_not_detached(self) -> None:
@@ -317,6 +335,8 @@ class CollaborativeEngine:
         u, triggered = self._monitor_prologue(tokens_t)
         fhat = np.asarray(u).copy()
         if triggered.any():
+            tr = self._tracer
+            t0 = tr.clock() if tr is not None else 0.0
             uniform = active.all() and (t_vec == t_vec[0]).all()
             # uniform pools pass the scalar t (the original compiled
             # program); ragged pools pass per-slot end positions
@@ -329,6 +349,10 @@ class CollaborativeEngine:
                 jnp.asarray(triggered), u)
             self.server.cache = cache
             fhat = np.asarray(fhat_j)
+            if tr is not None:
+                # the sync path BLOCKS on the server here
+                tr.done("edge.catchup", "edge", t0, step=self.t,
+                        n_triggered=int(triggered.sum()))
             shipped = np.where(triggered, t_vec + 1 - self.server_pos, 0)
             self.comms.update_per_stream(shipped, active.astype(np.int64))
             self.server_pos = np.where(triggered, t_vec + 1, self.server_pos)
@@ -377,14 +401,16 @@ class CollaborativeEngine:
                 wire_opts = dict(address=address, batch=self.batch,
                                  max_len=self.max_len,
                                  tok_tail=tuple(self._history.shape[2:]),
-                                 coalesce=wire_coalesce, comms=self.comms)
+                                 coalesce=wire_coalesce, comms=self.comms,
+                                 metrics=self.metrics, tracer=self._tracer)
             worker = async_rpc.make_worker(transport, self._catchup,
                                            self.params, self.server.cache,
                                            latency_s=latency_s,
                                            wire_opts=wire_opts)
         self._worker = worker
         self._dispatcher = async_rpc.Dispatcher(
-            worker, max_staleness=max_staleness, comms=self.comms)
+            worker, max_staleness=max_staleness, comms=self.comms,
+            tracer=self._tracer)
         # what has been SHIPPED (dispatched) per stream; merges move
         # ``server_pos`` (what the protocol state reflects) up to this
         self._dispatch_pos = self.server_pos.copy()
@@ -403,7 +429,9 @@ class CollaborativeEngine:
         u_np = np.asarray(u)
         # dispatch first so the synchronous fallback (max_staleness=0)
         # merges this step's own reply below
+        tr = self._tracer
         if triggered.any():
+            t0 = tr.clock() if tr is not None else 0.0
             shipped = np.where(triggered, t_vec + 1 - self._dispatch_pos, 0)
             # one request per same-position cohort, so every request keeps
             # the scalar-t backlog/wire semantics (a uniform pool is the
@@ -417,10 +445,15 @@ class CollaborativeEngine:
             self.comms.update_per_stream(shipped, active.astype(np.int64))
             self._dispatch_pos = np.where(triggered, t_vec + 1,
                                           self._dispatch_pos)
+            if tr is not None:
+                tr.done("edge.dispatch", "edge", t0, step=self.t,
+                        n_triggered=int(triggered.sum()))
         else:
             self.comms.update_per_stream(np.zeros(B, np.int64),
                                          active.astype(np.int64))
         fhat = u_np.copy()
+        t_merge = tr.clock() if tr is not None else 0.0
+        n_merged = 0
         for r in self._dispatcher.collect(self.t):
             # churn drains before rewriting membership, so a reply's mask
             # can only reference still-attached slots; the `live` gate is
@@ -437,6 +470,10 @@ class CollaborativeEngine:
                 corr = np.asarray(m.s * deco.sigma(jnp.asarray(r.v), m.sigma))
                 fhat = np.where(live, u_np - corr, fhat)
             self.server_pos = np.where(live, r.t + 1, self.server_pos)
+            n_merged += 1
+        if tr is not None and n_merged:
+            tr.done("edge.merge", "edge", t_merge, step=self.t,
+                    n_replies=n_merged)
         self.edge_pos = t_vec + active
         self.t += 1
         return {"u": u_np, "fhat": fhat, "triggered": triggered}
@@ -569,8 +606,12 @@ class CollaborativeEngine:
         B, S = tokens.shape[0], tokens.shape[1]
         if S > self.max_len:
             raise ValueError(f"stream longer than max_len={self.max_len}")
+        tr = self._tracer
+        t0 = tr.clock() if tr is not None else 0.0
         u, fhat, trig, served = self._scan(self.params, tokens)
         trig_np = np.asarray(trig)
+        if tr is not None:
+            tr.done("scan.run", "edge", t0, batch=int(B), steps=int(S))
         comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=B)
         any_trig = trig_np.any(axis=1)
         last = np.where(any_trig, S - 1 - np.argmax(trig_np[:, ::-1], axis=1), -1)

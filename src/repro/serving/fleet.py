@@ -512,6 +512,16 @@ class FleetSupervisor:
                       "bytes_rx", "bytes_tx", "leased_rows"):
                 if k in h.stats and h.state in ("live", "draining"):
                     totals[k] = totals.get(k, 0) + h.stats[k]
+        # latency percentiles aggregate as max over live servers (the
+        # fleet-wide worst case — summing percentiles is meaningless);
+        # None while no server has observed that histogram yet
+        for k in ("replay_s_p50", "replay_s_p99",
+                  "queue_wait_s_p50", "queue_wait_s_p99",
+                  "turnaround_s_p99"):
+            vals = [h.stats[k] for h in self.servers.values()
+                    if h.state in ("live", "draining")
+                    and h.stats.get(k) is not None]
+            totals[k] = max(vals) if vals else None
         totals["n_live"] = len(self.live_servers())
         return {"ts": time.time(), "servers": per, "totals": totals}
 

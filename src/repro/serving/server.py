@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import decomposition as deco
+from repro.observability import MetricsRegistry, Tracer
 from repro.serving import wire
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import cache_batch_axes, zero_cache_rows
@@ -102,6 +103,7 @@ class CorrectionServer:
                  host: str = "127.0.0.1", port: int = 0,
                  coalesce: bool = True, mesh: Optional[str] = None,
                  tracker: Optional[Tracker] = None,
+                 tracer: Optional[Tracer] = None,
                  stats_interval_s: float = 0.5):
         self.cfg, self.m = cfg, cfg.monitor
         self.slots, self.max_len = int(slots), int(max_len)
@@ -138,12 +140,28 @@ class CorrectionServer:
         self._free: List[Tuple[int, int]] = [(0, self.slots)]  # [lo, hi)
         self._next_sid = 1
         self._pending: List[Tuple[Session, wire.WireRequest, float]] = []
-        self.stats = {"requests": 0, "replays": 0, "coalesced": 0,
-                      "sessions": 0, "bytes_rx": 0, "bytes_tx": 0,
-                      "attaches": 0, "detaches": 0, "defrags": 0,
-                      "refused_draining": 0}
 
-        # -- observability (serving/tracker.py) -------------------------------
+        # -- observability (repro/observability) ------------------------------
+        # One MetricsRegistry backs every counter and histogram below;
+        # ``stats``/``hist`` remain the public read surface (tests, the
+        # launch CLI's SIGTERM dump) but the heartbeat snapshot is now
+        # just ``registry.snapshot()`` plus identity fields — same keys
+        # the FleetSupervisor always scraped.
+        self.metrics = MetricsRegistry()
+        for name in ("requests", "replays", "coalesced", "sessions",
+                     "bytes_rx", "bytes_tx", "attaches", "detaches",
+                     "defrags", "refused_draining"):
+            self.metrics.counter(name)   # pre-create: zeros still report
+        # replay compute time per coalesced group (seconds)
+        self.metrics.histogram("replay_s", 1e-5, 60.0)
+        # requests merged per replay (the coalescing win)
+        self.metrics.histogram("coalesce_width", 1.0, 4096.0)
+        # request arrival -> reply enqueued, server-side (seconds)
+        self.metrics.histogram("turnaround_s", 1e-5, 60.0)
+        # request arrival -> replay start: the v4 REPLY timing payload,
+        # so clients can split queueing from compute in their RTT
+        self.metrics.histogram("queue_wait_s", 1e-6, 60.0)
+
         # ``tracker`` turns the one-shot SIGTERM stats print into a live
         # surface: serve_forever logs a full snapshot every
         # ``stats_interval_s`` — with a JsonFileTracker that IS the fleet
@@ -151,14 +169,10 @@ class CorrectionServer:
         self.tracker = tracker
         self.stats_interval_s = float(stats_interval_s)
         self._last_stats_log = 0.0
-        self.hist = {
-            # replay compute time per coalesced group (seconds)
-            "replay_s": Histogram(1e-5, 60.0),
-            # requests merged per replay (the coalescing win)
-            "coalesce_width": Histogram(1.0, 4096.0),
-            # request arrival -> reply enqueued, server-side (seconds)
-            "turnaround_s": Histogram(1e-5, 60.0),
-        }
+        # optional server-LOCAL span tracer (launch/server.py
+        # --trace-file): records server.queue / server.replay spans on
+        # the server's own clock; None (the default) costs one flag check
+        self.tracer = tracer
 
         # -- drain (fleet lifecycle) ------------------------------------------
         # request_drain() is signal-safe (launch/server.py maps SIGUSR1 to
@@ -188,6 +202,18 @@ class CorrectionServer:
         self._closed = False
 
     # -- observability / fleet surface ---------------------------------------
+    @property
+    def stats(self) -> Dict[str, object]:
+        """Counter snapshot (name -> value) — the pre-registry ``stats``
+        dict, now a registry view.  Read-only: mutate via
+        ``self.metrics.inc``."""
+        return self.metrics.counters()
+
+    @property
+    def hist(self) -> Dict[str, Histogram]:
+        """The registry's histograms, by name (``replay_s`` etc.)."""
+        return self.metrics.hists
+
     def leased_rows(self) -> int:
         """Super-batch rows currently leased — the routing load signal."""
         return self.slots - sum(h - l for l, h in self._free)
@@ -208,10 +234,7 @@ class CorrectionServer:
             "fragmentation": self.fragmentation(),
             "draining": self.draining,
         }
-        snap.update(self.stats)
-        for name, h in self.hist.items():
-            for k, val in h.summary().items():
-                snap[f"{name}_{k}"] = val
+        snap.update(self.metrics.snapshot())
         return snap
 
     # -- drain (fleet lifecycle) ---------------------------------------------
@@ -310,7 +333,7 @@ class CorrectionServer:
             s.lo = lo
             lo += s.batch
         self._free = [(lo, self.slots)] if lo < self.slots else []
-        self.stats["defrags"] += 1
+        self.metrics.inc("defrags")
 
     # -- socket plumbing -----------------------------------------------------
     def _send(self, sess: Session, data: bytes) -> None:
@@ -327,7 +350,7 @@ class CorrectionServer:
                 self._drop(sess)
                 return
             del sess.out[:n]
-            self.stats["bytes_tx"] += n
+            self.metrics.inc("bytes_tx", n)
         events = selectors.EVENT_READ | (selectors.EVENT_WRITE if sess.out
                                          else 0)
         try:
@@ -392,7 +415,7 @@ class CorrectionServer:
             if not data:
                 self._drop(sess)
                 return
-            self.stats["bytes_rx"] += len(data)
+            self.metrics.inc("bytes_rx", len(data))
             try:
                 payloads = sess.reader.feed(data)
                 for p in payloads:
@@ -412,7 +435,7 @@ class CorrectionServer:
             if self.draining:
                 # a REFUSAL, not a death: the client sees HandshakeRefused
                 # and tries a sibling (the router stopped advertising us)
-                self.stats["refused_draining"] += 1
+                self.metrics.inc("refused_draining")
                 self._send(sess, wire.encode_error(
                     "draining: no new sessions"))
                 return
@@ -444,7 +467,7 @@ class CorrectionServer:
             sess.coalesce = bool(msg.coalesce) and self.coalesce
             sess.client = msg.client
             self._reset_rows(lo, lo + msg.batch)
-            self.stats["sessions"] += 1
+            self.metrics.inc("sessions")
             self._send(sess, wire.encode_hello_ack(
                 wire.HelloAck(sess.sid, lo, self.max_len)))
         elif isinstance(msg, wire.WireRequest):
@@ -477,8 +500,8 @@ class CorrectionServer:
                 return
             row = sess.lo + msg.slot
             self._reset_rows(row, row + 1)
-            key = "attaches" if isinstance(msg, wire.Attach) else "detaches"
-            self.stats[key] += 1
+            self.metrics.inc("attaches" if isinstance(msg, wire.Attach)
+                             else "detaches")
         elif isinstance(msg, wire.Bye):
             self._flush(sess)
             self._drop(sess)
@@ -547,22 +570,35 @@ class CorrectionServer:
         self._cache = cache
         dt = time.monotonic() - t0
         v_np = np.asarray(v)
-        self.stats["replays"] += 1
-        self.stats["requests"] += len(group)
+        self.metrics.inc("replays")
+        self.metrics.inc("requests", len(group))
         if len(group) > 1:
-            self.stats["coalesced"] += len(group) - 1
-        self.hist["replay_s"].observe(max(dt, 1e-9))
-        self.hist["coalesce_width"].observe(len(group))
+            self.metrics.inc("coalesced", len(group) - 1)
+        hist = self.metrics.hists
+        hist["replay_s"].observe(max(dt, 1e-9))
+        hist["coalesce_width"].observe(len(group))
+        if self.tracer is not None:
+            self.tracer.add("server.replay", "server", t0, dt,
+                            track="server", coalesced=len(group))
         now = time.monotonic()
         for sess, req, arrived in group:
-            self.hist["turnaround_s"].observe(max(now - arrived, 1e-9))
+            # queue wait = arrival -> replay start: the duration-only v4
+            # timing payload the client uses to split its measured RTT
+            # into socket / queue / compute
+            queue_s = max(t0 - arrived, 0.0)
+            hist["queue_wait_s"].observe(max(queue_s, 1e-9))
+            hist["turnaround_s"].observe(max(now - arrived, 1e-9))
+            if self.tracer is not None:
+                self.tracer.add("server.queue", "server", arrived, queue_s,
+                                track="server", req_id=req.req_id)
             vi = v_np[sess.lo:sess.hi]
             fhat = np.asarray(self._fuse(jnp.asarray(req.u),
                                          jnp.asarray(vi),
                                          jnp.asarray(req.triggered)))
             self._send(sess, wire.encode_reply(wire.WireReply(
                 req.req_id, req.t, req.triggered, vi, fhat,
-                server_time_s=dt / len(group), coalesced=len(group))))
+                server_time_s=dt / len(group), coalesced=len(group),
+                queue_s=queue_s)))
 
     def _process_pending(self) -> None:
         if not self._pending:

@@ -28,6 +28,7 @@ import os
 import sys
 import tempfile
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Sequence
 
 
@@ -79,11 +80,17 @@ class LogTracker(Tracker):
 
 
 class InMemoryTracker(Tracker):
-    """Keeps every snapshot; ``latest``/``summary`` for tests and the
-    supervisor's in-process (thread-backend) scrape path."""
+    """Keeps recent snapshots; ``latest``/``summary`` for tests and the
+    supervisor's in-process (thread-backend) scrape path.
 
-    def __init__(self):
-        self.records: List[Dict[str, Any]] = []
+    ``max_records`` bounds the ring (oldest snapshots evicted): a
+    long-running server heartbeats every ``stats_interval_s``, so an
+    unbounded list was a slow leak.  ``None`` keeps everything (short
+    test runs that assert on the full record stream)."""
+
+    def __init__(self, max_records: Optional[int] = 4096):
+        self._records: "deque[Dict[str, Any]]" = deque(maxlen=max_records)
+        self.max_records = max_records
         self.summary: Dict[str, Any] = {}
 
     def log(self, metrics: Dict[str, Any], *, step: Optional[int] = None
@@ -91,14 +98,20 @@ class InMemoryTracker(Tracker):
         rec = dict(metrics)
         if step is not None:
             rec["step"] = step
-        self.records.append(rec)
+        self._records.append(rec)
 
     def log_summary(self, metrics: Dict[str, Any]) -> None:
         self.summary = dict(metrics)
 
     @property
+    def records(self) -> List[Dict[str, Any]]:
+        """The retained snapshots, oldest first (a list copy — the ring
+        itself is private so eviction can't surprise an iterator)."""
+        return list(self._records)
+
+    @property
     def latest(self) -> Optional[Dict[str, Any]]:
-        return self.records[-1] if self.records else None
+        return self._records[-1] if self._records else None
 
 
 class JsonFileTracker(Tracker):
@@ -169,6 +182,13 @@ class Histogram:
     Summaries expose count/mean/max plus approximate p50/p99 from the
     bucket midpoints — enough resolution for replay-latency and
     coalesce-width dashboards without keeping raw samples.
+
+    Edge-case contract (unit-tested): a quantile of an EMPTY histogram
+    is ``None`` (there is no defined percentile — 0.0 would read as "we
+    measured and it was instant"), and with exactly ONE observation
+    every quantile is that observation (a bucket midpoint could sit a
+    factor away from the sample).  With >= 2 observations quantiles are
+    bucket-geomean estimates clamped into ``[vmin, vmax]``.
     """
 
     def __init__(self, lo: float, hi: float, n_buckets: int = 24):
@@ -180,32 +200,38 @@ class Histogram:
         self.total = 0.0
         self.n = 0
         self.vmax = 0.0
+        self.vmin = math.inf
 
     def observe(self, x: float) -> None:
         self.n += 1
         self.total += x
         if x > self.vmax:
             self.vmax = x
+        if x < self.vmin:
+            self.vmin = x
         import bisect
         self.counts[bisect.bisect_left(self.edges, x)] += 1
 
-    def _quantile(self, q: float) -> float:
+    def _quantile(self, q: float) -> Optional[float]:
         if self.n == 0:
-            return 0.0
+            return None
+        if self.n == 1:
+            return self.vmax  # the single observation, exactly
         target = q * self.n
         seen = 0
         for i, c in enumerate(self.counts):
             seen += c
             if seen >= target:
                 if i == 0:
-                    return min(self.edges[0], self.vmax)
-                if i >= len(self.edges):
-                    return self.vmax
-                return min(math.sqrt(self.edges[i - 1] * self.edges[i]),
-                           self.vmax)
+                    est = self.edges[0]
+                elif i >= len(self.edges):
+                    est = self.vmax
+                else:
+                    est = math.sqrt(self.edges[i - 1] * self.edges[i])
+                return min(max(est, self.vmin), self.vmax)
         return self.vmax
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Optional[float]]:
         mean = self.total / self.n if self.n else 0.0
         return {"n": self.n, "mean": mean, "max": self.vmax,
                 "p50": self._quantile(0.5), "p99": self._quantile(0.99)}

@@ -40,9 +40,20 @@ clients).  v3 added the fleet-control frames REDIRECT (a router answers
 a HELLO with the address of the least-loaded live server — the client
 re-HELLOs there) and GOAWAY (a draining server asks its sessions to
 finish in-flight work and move to a sibling; see ``serving/fleet.py``
-and docs/fleet.md).  Version mismatches are rejected loudly on BOTH
-sides — a v1 peer gets an ERROR frame naming the versions, never silent
-misinterpretation.
+and docs/fleet.md).  v4 appends an OPTIONAL server-timing payload to
+REPLY (``queue_s``: request arrival -> replay start on the server —
+durations only, so no clock sync between the processes is needed);
+together with the existing ``server_time_s``/``coalesced`` fields the
+client assembles the full RTT breakdown (serialize / socket / queue /
+compute) for the observability layer (docs/observability.md).
+
+Compatibility: the decoder accepts any version in
+``[MIN_VERSION, VERSION]`` — a v3 REPLY simply has no timing payload
+(``queue_s`` reports -1, "absent") and every other frame body is
+unchanged since v3, so v3 and v4 peers interoperate in both directions.
+Versions below ``MIN_VERSION`` (or above ``VERSION``) are rejected
+loudly on BOTH sides — a v1 peer gets an ERROR frame naming the
+versions, never silent misinterpretation.
 """
 from __future__ import annotations
 
@@ -56,7 +67,8 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 MAGIC = 0xC0AB
-VERSION = 3  # v3: REDIRECT/GOAWAY fleet-control frames
+VERSION = 4      # v4: optional REPLY server-timing payload (queue_s)
+MIN_VERSION = 3  # oldest peer version still decoded (frame-compatible)
 
 MSG_HELLO = 1
 MSG_HELLO_ACK = 2
@@ -208,6 +220,11 @@ class WireReply:
     fhat: np.ndarray         # (B,) float32 fused from the request's u
     server_time_s: float     # replay compute time on the server
     coalesced: int = 1       # requests merged into the replay that served this
+    # v4 server-timing payload: request arrival -> replay start on the
+    # server (a DURATION — no clock sync needed).  < 0 means "absent"
+    # (a v3 peer's reply); the client then reports RTT only, with no
+    # serialize/socket/queue/compute breakdown for that request.
+    queue_s: float = -1.0
 
 
 @dataclass
@@ -308,6 +325,10 @@ def encode_reply(r: WireReply) -> bytes:
             + _pack_array(np.asarray(r.triggered, bool))
             + _pack_array(np.asarray(r.v, np.float32))
             + _pack_array(np.asarray(r.fhat, np.float32)))
+    if r.queue_s >= 0:
+        # v4 timing payload: appended after the arrays so a decoder
+        # detects it by presence (a v3-shaped frame simply ends earlier)
+        body += struct.pack("<d", r.queue_s)
     return frame(_header(MSG_REPLY) + body)
 
 
@@ -344,8 +365,9 @@ def decode(payload: bytes) -> Message:
     magic, version, msg_type = _HEADER.unpack_from(payload, 0)
     if magic != MAGIC:
         raise WireError(f"bad magic 0x{magic:04x}")
-    if version != VERSION:
-        raise WireError(f"wire version {version} != supported {VERSION}")
+    if not (MIN_VERSION <= version <= VERSION):
+        raise WireError(f"wire version {version} outside supported "
+                        f"[{MIN_VERSION}, {VERSION}]")
     off = _HEADER.size
     try:
         if msg_type == MSG_HELLO:
@@ -376,9 +398,14 @@ def decode(payload: bytes) -> Message:
             triggered, off = _unpack_array(payload, off)
             v, off = _unpack_array(payload, off)
             fhat, off = _unpack_array(payload, off)
+            # v4 timing payload is detected by presence: a v3 frame (or a
+            # v4 sender with timing disabled) simply ends after fhat
+            queue_s = -1.0
+            if off + 8 <= len(payload):
+                (queue_s,) = struct.unpack_from("<d", payload, off)
             return WireReply(req_id, t, triggered.astype(bool),
                              v.astype(np.float32), fhat.astype(np.float32),
-                             srv_s, coal)
+                             srv_s, coal, queue_s)
         if msg_type == MSG_BYE:
             return Bye()
         if msg_type == MSG_ATTACH:

@@ -133,8 +133,10 @@ class TestTracker:
         # approximate quantiles must stay inside the observed range
         assert 0 < s["p50"] <= s["max"]
         assert s["p50"] <= s["p99"] <= s["max"]
+        # empty histogram: counts at zero, percentiles honestly absent
+        # (None, not a fabricated 0.0 — see test_observability.py)
         assert Histogram(1e-4, 10.0).summary() == {
-            "n": 0, "mean": 0.0, "max": 0.0, "p50": 0.0, "p99": 0.0}
+            "n": 0, "mean": 0.0, "max": 0.0, "p50": None, "p99": None}
 
     def test_json_file_tracker_heartbeat_round_trip(self, tmp_path):
         path = str(tmp_path / "hb" / "stats.json")

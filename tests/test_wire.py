@@ -143,14 +143,21 @@ class TestCodec:
         assert wire.decode(p) == wire.GoAway("rebalance")
 
     def test_old_protocol_version_rejected_loudly(self):
-        """The v3 bump (REDIRECT/GOAWAY fleet-control frames) must reject
-        v1 peers with an error NAMING both versions — never silent
-        misinterpretation of the old layout."""
-        assert wire.VERSION == 3
+        """Versions outside the ``[MIN_VERSION, VERSION]`` accept window
+        must be rejected with an error NAMING both the version and the
+        window — never silent misinterpretation of the old layout.  (v4
+        is frame-compatible with v3 — the optional REPLY timing payload
+        is detected by presence — so v3 itself DECODES; see
+        test_observability.py for that direction.)"""
+        assert wire.VERSION == 4 and wire.MIN_VERSION == 3
         good = wire.FrameReader().feed(wire.encode_bye())[0]
         v1 = good[:2] + b"\x01" + good[3:]
-        with pytest.raises(wire.WireError, match="version 1.*supported 3"):
+        with pytest.raises(wire.WireError,
+                           match=r"version 1.*supported \[3, 4\]"):
             wire.decode(v1)
+        v5 = good[:2] + b"\x05" + good[3:]
+        with pytest.raises(wire.WireError, match="version 5"):
+            wire.decode(v5)
 
     def test_frame_reader_reassembles_any_fragmentation(self):
         frames = [wire.encode_bye(), wire.encode_error("x" * 300),

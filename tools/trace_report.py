@@ -1,0 +1,130 @@
+"""Trace report CLI: summarize a serving trace into the critical-path
+breakdown table, validate trace files, and run the self-contained
+trace smoke (the CI ``trace-smoke`` step).
+
+A trace is the Chrome trace-event / Perfetto JSON a traced session
+exports (``SessionConfig(trace=True)`` + ``MonitorSession.export_trace``,
+or ``bench_serving --trace`` / ``launch.serve --trace`` /
+``launch.server --trace-file``).  This tool reads one back and answers
+the ROADMAP's question — where does the wire RTT actually go? — as a
+table over the four stages that tile each request (serialize / socket /
+queue / compute), plus every edge-side span group.
+
+Usage::
+
+    python tools/trace_report.py results/trace_wire_b64.json
+    python tools/trace_report.py --validate results/trace_wire_b64.json
+    python tools/trace_report.py --smoke [--out /tmp/trace.json]
+
+``--validate`` only runs the schema gate (exit nonzero on violation).
+``--smoke`` needs no input file: it spawns a correction-server
+subprocess, runs a traced batch-8 wire session against it (threshold
+pinned low so every step triggers), exports the trace, validates it,
+and prints the breakdown — the whole observability path in one command.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def report(path: str) -> None:
+    from repro.observability import breakdown_table, load_trace
+    obj = load_trace(path)
+    events = obj["traceEvents"]
+    other = obj.get("otherData", {})
+    print(f"{path}: {len(events)} events, trace_id="
+          f"{other.get('trace_id', '?')}, dropped={other.get('dropped', 0)}")
+    for line in breakdown_table(events):
+        print(line)
+
+
+def validate(path: str) -> None:
+    from repro.observability import load_trace
+    n = len(load_trace(path)["traceEvents"])
+    print(f"{path}: OK ({n} events)")
+
+
+def smoke(out: str, *, batch: int = 8, steps: int = 24) -> None:
+    """Traced end-to-end wire session against a spawned server process."""
+    import numpy as np
+
+    from repro.configs.paper_synthetic import SERVING
+    from repro.core import decomposition as deco
+    from repro.launch.server import spawn_subprocess
+    from repro.observability import breakdown_table, load_trace
+    from repro.serving import MonitorSession, SessionConfig, TransportSpec
+
+    import jax
+
+    cfg = SERVING
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    stream = rng.integers(0, cfg.vocab_size, (batch, steps)).astype(np.int32)
+
+    tmp = tempfile.mkdtemp(prefix="trace-smoke-")
+    uds = os.path.join(tmp, "corr.sock")
+    proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
+                            slots=batch, max_len=steps + 8,
+                            ready_file=os.path.join(tmp, "ready"),
+                            extra_args=("--idle-exit-s", "30"))
+    try:
+        # pin the operating point so EVERY step triggers: the smoke must
+        # exercise dispatch / wire / server spans, not depend on the data
+        config = SessionConfig(mode="async", max_staleness=4, trace=True,
+                               threshold=-1e9, trigger_margin=0.0,
+                               transport=TransportSpec("wire", address=uds))
+        session = MonitorSession.open(params, cfg, batch=batch,
+                                      max_len=steps + 8, config=config)
+        session.run(stream)
+        n = session.export_trace(out)
+        obj = load_trace(out)  # the schema gate
+        names = {e["name"] for e in obj["traceEvents"] if e.get("ph") == "X"}
+        required = {"edge.decode", "edge.trigger", "wire.encode",
+                    "wire.request", "server.queue", "server.catchup"}
+        missing = required - names
+        if missing:
+            raise SystemExit(f"trace-smoke: missing span groups {missing}")
+        print(f"trace-smoke OK: {n} spans -> {out}")
+        for line in breakdown_table(obj["traceEvents"]):
+            print(line)
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="trace JSON to summarize")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-validate only (no table)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="spawn a server, run a traced wire session, "
+                         "validate + summarize (the CI trace-smoke step)")
+    ap.add_argument("--out", default=None,
+                    help="--smoke: where to write the trace "
+                         "(default: results/trace_smoke.json)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        if args.trace is not None:
+            ap.error("--smoke generates its own trace (drop the argument)")
+        smoke(args.out or "results/trace_smoke.json")
+        return
+    if args.trace is None:
+        ap.error("need a trace file (or --smoke)")
+    if args.validate:
+        validate(args.trace)
+    else:
+        report(args.trace)
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except BrokenPipeError:  # e.g. piped into head
+        sys.exit(0)
