@@ -346,6 +346,94 @@ def _bench_trace(name: str, cfg, batch: int, steps: int, csv: List[str], *,
             proc.kill()
 
 
+def _bench_shm(name: str, cfg, batch: int, steps: int, csv: List[str], *,
+               rate: float = 0.3,
+               staleness: int = SERVING_MAX_STALENESS) -> None:
+    """The ``--transport shm`` arm: the SAME operating point as the
+    coalesced ``_bench_wire`` arm, but the server subprocess is started
+    with ``--transport shm`` and the client attaches through a
+    ``TransportSpec("shm", ...)`` — payload frames ride the mmap'd
+    same-host ring pair, only the lease lifecycle stays on the control
+    socket.  Traced (``SessionConfig(trace=True)``) so the run exports
+    ``results/trace_shm_b{batch}.json`` and the row carries the
+    stage-breakdown p50/p99 columns next to the wire_traced row: the
+    ``socket`` stage (now the ``shm.ring`` span) is where the collapse
+    shows.  u/trigger stay bitwise vs the offline scan, and the bytes
+    must land in the ``shm`` comms bucket, not ``wire``."""
+    from repro.observability import breakdown, load_trace
+    from repro.launch.server import spawn_subprocess
+
+    params = deco.init_collab_lm(jax.random.PRNGKey(0), cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, steps))["tokens"]
+    max_len = steps + 8
+    cfg = _calibrate(cfg, params, stream, batch, max_len, rate)
+    warm = 6
+
+    tmp = tempfile.mkdtemp(prefix="bench_shm_")
+    uds = os.path.join(tmp, "corr.sock")
+    proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
+                            slots=max(batch, SERVING_WIRE_SLOTS),
+                            max_len=max_len,
+                            ready_file=os.path.join(tmp, "ready"),
+                            extra_args=("--idle-exit-s", "60",
+                                        "--transport", "shm"))
+    try:
+        eng = CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+        sess = eng.session(SessionConfig(
+            mode="async", max_staleness=staleness, trace=True,
+            transport=TransportSpec("shm", address=uds)))
+        sess.__enter__()
+        outs = []
+        for t in range(warm):
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
+        t0 = time.time()
+        for t in range(warm, steps):
+            outs.append(sess.step(jnp.asarray(stream[:, t])))
+        sess.close()
+        dt = time.time() - t0
+        tps = batch * (steps - warm) / dt
+
+        res = {k: np.stack([o[k] for o in outs], 1)
+               for k in ("u", "triggered")}
+        scan = _scan(params, cfg, stream, batch, max_len)
+        assert np.array_equal(res["u"], scan["u"])
+        assert np.array_equal(res["triggered"], scan["triggered"])
+
+        rep = eng.comms.report()
+        s, a = rep["shm"], rep["async"]
+        assert s["replies"] > 0, "shm arm fell back to plain wire"
+        assert rep["bytes_sent"] <= rep["bytes_baseline"]
+
+        out = os.path.join(os.path.dirname(__file__), "..", "results",
+                           f"trace_shm_b{batch}.json")
+        n_spans = sess.export_trace(out)
+        load_trace(out)  # the schema gate (raises on violation)
+        stats = breakdown(sess.tracer.spans())
+        cols = [f"tokens_per_sec={tps:.0f};transport=shm;coalesce=1;"
+                f"trace_spans={n_spans};"
+                f"rtt_mean_ms={s['rtt_mean_s'] * 1e3:.2f};"
+                f"rtt_max_ms={s['rtt_max_s'] * 1e3:.2f};"
+                f"shm_tx_kb={s['tx_bytes'] / 1e3:.1f};"
+                f"shm_rx_kb={s['rx_bytes'] / 1e3:.1f};"
+                f"stall_s={a['stall_s']:.2f}"]
+        for stage in ("rtt", "serialize", "socket", "queue", "compute"):
+            st = stats.get(stage)
+            if st is not None:
+                cols.append(f"{stage}_p50_ms={st['p50_s'] * 1e3:.3f};"
+                            f"{stage}_p99_ms={st['p99_s'] * 1e3:.3f}")
+        csv.append(f"serving/{name}_shm,"
+                   f"{1e6 / max(tps, 1e-9) * batch:.1f},"
+                   + ";".join(cols)
+                   + f";trace_file=results/trace_shm_b{batch}.json")
+        print(f"shm trace: {n_spans} spans -> {out}", flush=True)
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
 def _bench_churn(name: str, cfg, batch: int, steps: int, csv: List[str], *,
                  rates=(0.0, 0.05, 0.1, 0.2), rate: float = 0.3,
                  seed: int = 0) -> None:
@@ -573,6 +661,16 @@ def run_wire(csv: List[str]) -> None:
         print(row, flush=True)
 
 
+def run_shm(csv: List[str]) -> None:
+    """The shm-transport row only (bench_serving --transport shm):
+    traced same-host ring run + results/trace_shm_b64.json."""
+    n0 = len(csv)
+    _bench_shm("paper_synthetic_b64", PAPER_SERVING, batch=64, steps=96,
+               csv=csv, rate=0.3)
+    for row in csv[n0:]:
+        print(row, flush=True)
+
+
 def run_trace(csv: List[str]) -> None:
     """The traced-wire row only (bench_serving --trace): Perfetto trace
     export + the p50/p99 RTT-breakdown columns."""
@@ -636,9 +734,13 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--transport", choices=("all", "wire"), default="all",
-                    help="'wire' runs only the two-process socket bench "
-                         "and appends its rows to results/bench.csv")
+    ap.add_argument("--transport", choices=("all", "wire", "shm"),
+                    default="all",
+                    help="'wire' runs only the two-process socket bench; "
+                         "'shm' runs the same operating point over the "
+                         "same-host shared-memory ring transport (traced, "
+                         "exports results/trace_shm_b64.json); both append "
+                         "their rows to results/bench.csv")
     ap.add_argument("--fleet", action="store_true",
                     help="run only the fleet bench: 2 correction-server "
                          "subprocesses behind the least-loaded router, a "
@@ -671,7 +773,7 @@ if __name__ == "__main__":
         print("MESHROW " + _mesh_child_row(*args._mesh_child), flush=True)
         sys.exit(0)
     rows: List[str] = []
-    if (args.transport == "wire" or args.churn or args.fleet or args.trace
+    if (args.transport != "all" or args.churn or args.fleet or args.trace
             or args.devices is not None):
         if args.churn:
             run_churn(rows)
@@ -681,6 +783,8 @@ if __name__ == "__main__":
             run_trace(rows)
         elif args.devices is not None:
             run_mesh_sweep(rows, args.devices)
+        elif args.transport == "shm":
+            run_shm(rows)
         else:
             run_wire(rows)
         out = os.path.join(os.path.dirname(__file__), "..", "results",

@@ -138,6 +138,12 @@ class CommsMeter:
     wire_rtt_s: float = 0.0    # sum of measured dispatch->reply round trips
     wire_rtt_max_s: float = 0.0
     wire_replies: int = 0
+    # -- shm transport (filled by ShmWorker): ring-plane bytes/RTTs ---------
+    shm_tx_bytes: int = 0      # frame bytes written into the c->s ring
+    shm_rx_bytes: int = 0      # frame bytes drained from the s->c ring
+    shm_rtt_s: float = 0.0     # sum of measured dispatch->reply round trips
+    shm_rtt_max_s: float = 0.0
+    shm_replies: int = 0
     # -- fleet failover (filled by SocketWorker when it migrates) -----------
     failovers: int = 0               # completed re-HELLO + replay migrations
     failover_tx_bytes: int = 0       # handshake + replay + resend tx bytes
@@ -156,6 +162,7 @@ class CommsMeter:
         self._per_stream_used = False
         self._async_used = False
         self._wire_used = False
+        self._shm_used = False
         self._failover_used = False
         self._inflight_reqs = 0
 
@@ -228,6 +235,25 @@ class CommsMeter:
         self.wire_replies += 1
         self.wire_rtt_s += float(dt)
         self.wire_rtt_max_s = max(self.wire_rtt_max_s, float(dt))
+
+    # -- shm transport (same-host rings; serving/shm.py).  Ring traffic is
+    # metered like socket traffic — zero-copy is not zero-cost, and the
+    # byte-reduction story must stay honest when frames move via memcpy --
+    def record_shm_tx(self, nbytes: int) -> None:
+        """``nbytes`` of wire-codec frames written into the c->s ring."""
+        self._shm_used = True
+        self.shm_tx_bytes += int(nbytes)
+
+    def record_shm_rx(self, nbytes: int) -> None:
+        self._shm_used = True
+        self.shm_rx_bytes += int(nbytes)
+
+    def record_shm_rtt(self, dt: float) -> None:
+        """One measured dispatch->reply round trip over the ring pair."""
+        self._shm_used = True
+        self.shm_replies += 1
+        self.shm_rtt_s += float(dt)
+        self.shm_rtt_max_s = max(self.shm_rtt_max_s, float(dt))
 
     # -- fleet failover (replay bytes audited separately from steady state) --
     def record_failover(self) -> None:
@@ -318,6 +344,14 @@ class CommsMeter:
                 "replies": self.wire_replies,
                 "rtt_mean_s": self.wire_rtt_s / max(self.wire_replies, 1),
                 "rtt_max_s": self.wire_rtt_max_s,
+            }
+        if self._shm_used:         # only when the shm rings carried frames
+            rep["shm"] = {
+                "tx_bytes": self.shm_tx_bytes,
+                "rx_bytes": self.shm_rx_bytes,
+                "replies": self.shm_replies,
+                "rtt_mean_s": self.shm_rtt_s / max(self.shm_replies, 1),
+                "rtt_max_s": self.shm_rtt_max_s,
             }
         if self._failover_used:    # only when a fleet migration happened
             rep["failover"] = {

@@ -42,17 +42,17 @@ def run_collab(args, cfg, params) -> None:
     B, S = args.batch, args.tokens
     stream = next(tok.lm_batches(5, cfg, B, S))["tokens"]
     eng = CollaborativeEngine(params, cfg, batch=B, max_len=S + 8)
-    if args.transport == "wire" and not args.address:
-        raise SystemExit("--transport wire needs --address "
+    if args.transport in ("wire", "shm") and not args.address:
+        raise SystemExit(f"--transport {args.transport} needs --address "
                          "(start: python -m repro.launch.server)")
     latency_s = (None if args.latency_ms is None or args.transport in
-                 ("inproc", "wire") else args.latency_ms * 1e-3)
+                 ("inproc", "wire", "shm") else args.latency_ms * 1e-3)
     # one config describes the whole session: mode="sync" over the wire is
     # the strict max_staleness=0 boundary (every trigger pays the measured
     # round trip); plain sync uses the blocking in-process path
     spec = (TransportSpec(args.transport, address=args.address,
                           latency_s=latency_s)
-            if (args.mode == "async" or args.transport == "wire")
+            if (args.mode == "async" or args.transport in ("wire", "shm"))
             else TransportSpec())
     config = SessionConfig(mode=args.mode, transport=spec,
                            max_staleness=args.max_staleness,
@@ -87,6 +87,12 @@ def run_collab(args, cfg, params) -> None:
               f"{w['rx_bytes']:,}B rx, RTT mean "
               f"{w['rtt_mean_s'] * 1e3:.2f} ms / max "
               f"{w['rtt_max_s'] * 1e3:.2f} ms over {w['replies']} replies")
+    if "shm" in rep:
+        s = rep["shm"]
+        print(f"shm rings (measured): {s['tx_bytes']:,}B tx / "
+              f"{s['rx_bytes']:,}B rx, RTT mean "
+              f"{s['rtt_mean_s'] * 1e3:.2f} ms / max "
+              f"{s['rtt_max_s'] * 1e3:.2f} ms over {s['replies']} replies")
 
 
 def main() -> None:
@@ -100,10 +106,11 @@ def main() -> None:
     ap.add_argument("--mode", choices=("sync", "async"), default="sync")
     ap.add_argument("--transport", default="stream",
                     choices=("inproc", "stream", "thread", "mock_remote",
-                             "wire"))
+                             "wire", "shm"))
     ap.add_argument("--address", default=None,
-                    help="wire transport: correction server UDS path or "
-                         "host:port (python -m repro.launch.server)")
+                    help="wire/shm transport: correction server UDS path "
+                         "or host:port (python -m repro.launch.server; "
+                         "shm needs a UDS on the same host)")
     ap.add_argument("--max-staleness", type=int, default=8)
     ap.add_argument("--latency-ms", type=float, default=None,
                     help="simulated RTT; default keeps the transport's own")

@@ -128,6 +128,10 @@ def main(argv=None) -> None:
     ap.add_argument("--no-coalesce", action="store_true",
                     help="disable request coalescing server-wide "
                          "(per-request replays; the bench baseline)")
+    ap.add_argument("--transport", choices=("wire", "shm"), default="wire",
+                    help="'shm' additionally offers same-host clients a "
+                         "shared-memory ring arena on the HELLO handshake "
+                         "(UDS only; wire clients are still served)")
     ap.add_argument("--mesh", default=None, metavar="SPEC",
                     help="shard the super-batch cache over a device mesh, "
                          "e.g. 'data:8' (slots must divide; on a CPU host "
@@ -178,9 +182,11 @@ def main(argv=None) -> None:
                            port=args.port if args.port is not None else 0,
                            coalesce=not args.no_coalesce, mesh=args.mesh,
                            tracker=tracker, tracer=tracer,
-                           stats_interval_s=args.stats_interval_s)
+                           stats_interval_s=args.stats_interval_s,
+                           shm=args.transport == "shm")
     print(f"correction server: arch={args.arch} slots={args.slots} "
           f"max_len={args.max_len} coalesce={not args.no_coalesce} "
+          f"transport={args.transport} "
           f"mesh={srv.mesh_spec} listening on {srv.address}", flush=True)
     if args.ready_file:
         with open(args.ready_file, "w") as fh:

@@ -25,6 +25,7 @@ STAGES = ("serialize", "socket", "queue", "compute")
 SPAN_STAGE = {
     "wire.encode": "serialize",
     "wire.socket": "socket",
+    "shm.ring": "socket",     # same stage, different plane (shm transport)
     "server.queue": "queue",
     "server.catchup": "compute",
 }

@@ -80,8 +80,12 @@ class TransportSpec:
                 ``stream`` (JAX async dispatch overlap), ``thread``
                 (worker thread), ``mock_remote`` (thread + simulated
                 RTT), ``wire`` (real socket to a standalone correction
-                server — ``python -m repro.launch.server``).
-    address   — ``wire`` only: UDS path or ``host:port`` of one server,
+                server — ``python -m repro.launch.server``), ``shm``
+                (wire protocol over same-host shared-memory rings —
+                ``TransportSpec.parse("shm:/tmp/corr.sock")``; falls
+                back to plain wire, with a logged reason, when the
+                server is remote or offers no arena).
+    address   — ``wire``/``shm``: UDS path or ``host:port`` of a server,
                 or ``fleet:<router-address>`` to connect through a
                 ``FleetSupervisor`` router (``python -m
                 repro.launch.fleet``): the session HELLOs the router,
@@ -106,23 +110,27 @@ class TransportSpec:
             raise ValueError(
                 f"unknown transport {self.kind!r}: valid transports are "
                 + ", ".join(repr(t) for t in TRANSPORTS))
-        if self.address is not None and self.kind != "wire":
+        if self.address is not None and self.kind not in ("wire", "shm"):
             raise ValueError(
-                f"transport {self.kind!r} takes no address (only 'wire')")
-        if self.kind == "wire" and self.address is None:
+                f"transport {self.kind!r} takes no address "
+                "(only 'wire' and 'shm')")
+        if self.kind in ("wire", "shm") and self.address is None:
             raise ValueError(
-                "wire transport needs an address (the correction server's "
-                "UDS path or host:port — python -m repro.launch.server)")
-        if self.latency_s is not None and self.kind in ("inproc", "wire"):
+                f"{self.kind} transport needs an address (the correction "
+                "server's UDS path or host:port — python -m "
+                "repro.launch.server)")
+        if self.latency_s is not None and self.kind in ("inproc", "wire",
+                                                        "shm"):
             raise ValueError(
                 f"transport {self.kind!r} has no latency model"
                 + (": RTT is measured on the real socket"
-                   if self.kind == "wire" else ""))
+                   if self.kind in ("wire", "shm") else ""))
 
     @classmethod
     def parse(cls, spec: Union[str, "TransportSpec"]) -> "TransportSpec":
         """``"stream"`` -> TransportSpec("stream");
         ``"wire:/tmp/corr.sock"`` / ``"wire:host:port"`` -> wire + address;
+        ``"shm:/tmp/corr.sock"`` -> same-host shared-memory rings;
         ``"fleet:/tmp/router.sock"`` -> wire through a fleet router.
         A TransportSpec passes through unchanged."""
         if isinstance(spec, cls):

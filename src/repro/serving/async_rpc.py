@@ -94,7 +94,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-TRANSPORTS = ("inproc", "stream", "thread", "mock_remote", "wire")
+TRANSPORTS = ("inproc", "stream", "thread", "mock_remote", "wire", "shm")
 
 
 @dataclass
@@ -464,6 +464,11 @@ class SocketWorker(ServerWorker):
         self._failing_over = False   # routes _tx/_rx to the failover bucket
         self._internal_next = 1 << 62  # clear of the Dispatcher's req_ids
         self.server_address: Optional[str] = None
+        # cork/uncork: while corked, outgoing frames gather into one
+        # buffer and leave in a single transmit at uncork — the engine
+        # corks around a step's dispatch fan-out so N cohort requests
+        # cost one syscall (the client half of wire micro-batching)
+        self._corked: Optional[List[bytes]] = None
         self._sock, self._reader = None, wire.FrameReader()
         self._establish(self._connect_timeout)
 
@@ -503,8 +508,7 @@ class SocketWorker(ServerWorker):
             # whole deadline
             per = min(2.0, remaining) if self._fleet else remaining
             try:
-                sock, ack, reader, tx, rx = wire.connect_hello(
-                    self._target, self._hello, timeout=per)
+                sock, ack, reader, tx, rx = self._handshake(per)
                 break
             except (wire.HandshakeRefused, wire.PeerGone, OSError):
                 if not self._fleet:
@@ -522,6 +526,13 @@ class SocketWorker(ServerWorker):
         except OSError:
             self.server_address = None
         self._must_move = False
+
+    def _handshake(self, timeout: float):
+        """One connect + HELLO attempt — the transport-specific half of
+        ``_establish`` (the shm transport overrides this to negotiate an
+        arena on the same handshake)."""
+        return self._wire.connect_hello(self._target, self._hello,
+                                        timeout=timeout)
 
     def _failover(self, why: str) -> None:
         """Migrate to another server: re-resolve, re-HELLO, replay each
@@ -599,12 +610,20 @@ class SocketWorker(ServerWorker):
         self._failover("server draining")
 
     # -- socket pump ---------------------------------------------------------
+    # the tracer span name for the transport-hop stage of the RTT: the
+    # shm transport reports "shm.ring" (same stage key in the breakdown
+    # table — docs/observability.md)
+    _socket_span = "wire.socket"
+
+    def _record_rtt(self, rtt: float) -> None:
+        if self._comms is not None:
+            self._comms.record_wire_rtt(rtt)
+
     def _to_reply(self, msg) -> CatchupReply:
         now = time.monotonic()
         disp, ser = self._dispatch_wall.pop(msg.req_id, (now, 0.0))
         rtt = now - disp
-        if self._comms is not None:
-            self._comms.record_wire_rtt(rtt)
+        self._record_rtt(rtt)
         if self._metrics is not None or self._tracer is not None:
             self._breakdown(msg, now, disp, ser, rtt)
         return CatchupReply(msg.req_id, msg.t, np.asarray(msg.triggered),
@@ -641,7 +660,7 @@ class SocketWorker(ServerWorker):
             if queue is not None:
                 tr.add("server.queue", "server", now - compute - queue,
                        queue, track="server", req_id=msg.req_id)
-                tr.add("wire.socket", "wire", disp,
+                tr.add(self._socket_span, "wire", disp,
                        max(rtt - queue - compute, 0.0), track="wire",
                        req_id=msg.req_id)
 
@@ -685,14 +704,22 @@ class SocketWorker(ServerWorker):
                 self._failover("server closed connection")
                 continue
             self._rx(len(data))
-            for p in self._reader.feed(data):
-                msg = wire.decode(p)
-                if isinstance(msg, wire.Error):
-                    raise wire.WireError(f"server: {msg.message}")
-                if isinstance(msg, wire.GoAway):
-                    self._must_move = True
-                elif isinstance(msg, wire.WireReply):
-                    got |= self._accept_reply(msg)
+            got |= self._on_payloads(self._reader.feed(data))
+
+    def _on_payloads(self, payloads: List[bytes]) -> bool:
+        """Decode and act on frame payloads from either plane (socket or
+        ring).  Returns True when a REAL reply landed."""
+        wire = self._wire
+        got = False
+        for p in payloads:
+            msg = wire.decode(p)
+            if isinstance(msg, wire.Error):
+                raise wire.WireError(f"server: {msg.message}")
+            if isinstance(msg, wire.GoAway):
+                self._must_move = True
+            elif isinstance(msg, wire.WireReply):
+                got |= self._accept_reply(msg)
+        return got
 
     # -- ServerWorker API ----------------------------------------------------
     def dispatch(self, req: CatchupRequest) -> None:
@@ -737,11 +764,39 @@ class SocketWorker(ServerWorker):
                     return out
             self._pump(block=True)
 
-    # -- slot-pool churn (MonitorSession.attach/detach over the wire) --------
+    # -- frame egress --------------------------------------------------------
     def _send_frame(self, buf: bytes) -> None:
+        if self._corked is not None:
+            self._corked.append(buf)
+            return
+        self._transmit(buf)
+
+    def _transmit(self, buf: bytes) -> None:
+        """Hand one (possibly gathered) buffer to the transport — the
+        only place client bytes actually leave."""
         self._sock.settimeout(None)
         self._sock.sendall(buf)
         self._tx(len(buf))
+
+    def cork(self) -> None:
+        """Start gathering outgoing frames (idempotent).  Frames queue
+        locally until ``uncork`` sends them as ONE transmit — callers
+        wrap a dispatch fan-out, never a wait."""
+        if self._corked is None:
+            self._corked = []
+
+    def uncork(self) -> None:
+        bufs, self._corked = self._corked, None
+        if not bufs:
+            return
+        try:
+            self._transmit(b"".join(bufs))
+        except OSError as e:
+            # every corked frame is already in _flights: failover
+            # re-establishes and resends them verbatim
+            self._failover(f"send failed: {e}")
+
+    # -- slot-pool churn (MonitorSession.attach/detach over the wire) --------
 
     def attach_slot(self, slot: int) -> None:
         """Tell the server to zero and re-lease row ``slot`` of this
@@ -785,6 +840,179 @@ class SocketWorker(ServerWorker):
             pass
 
 
+class ShmWorker(SocketWorker):
+    """The ``shm`` transport: ``SocketWorker`` with the DATA plane moved
+    into a same-host shared-memory ring pair (``serving/shm.py``).
+
+    The handshake negotiates an arena over the ordinary UDS control
+    socket (HELLO asks, HELLO_ACK offers + ships the fds via
+    SCM_RIGHTS, SHM_OPEN confirms); REQUEST frames then go out through
+    the client->server ring and REPLY frames come back through the
+    server->client ring — byte-identical wire-codec frames, so every
+    protocol invariant (FIFO replies, head-of-flights dedup, replay
+    failover) is inherited unchanged.  Control frames (BYE / ATTACH /
+    DETACH / GOAWAY / ERROR) stay on the socket.
+
+    FALLBACK (always to plain wire, with a logged reason): a TCP server
+    address, a server that offers no arena (wire-only or pre-v5), or a
+    failed arena attach all leave ``self._peer`` as None and this class
+    behaves exactly like its parent.  Fleet failover composes the same
+    way: on server death the usual re-HELLO runs through the router —
+    if the surviving sibling doesn't offer shm, the session continues
+    pure-wire (``tests/test_shm.py`` asserts bitwise identity through
+    that migration).
+
+    Metering: ring payload bytes and ring-transport RTTs land in
+    ``comms["shm"]``, socket (handshake/control) bytes in
+    ``comms["wire"]`` — shm traffic is measured, never silently free.
+    """
+
+    kind = "shm"
+
+    def __init__(self, cache, **kw):
+        self._peer = None
+        self.fallback_reason = ""
+        super().__init__(cache, **kw)
+
+    # -- handshake -----------------------------------------------------------
+    def _handshake(self, timeout: float):
+        import dataclasses
+
+        from repro.serving import shm, wire
+
+        self._teardown_peer()
+        family, _ = wire.parse_address(self._target)
+        if family != socket.AF_UNIX:
+            # SCM_RIGHTS and a shared arena need a shared host: don't
+            # even ask, the session is pure wire
+            self.fallback_reason = ("remote (TCP) server address: shm "
+                                    "needs a shared host")
+            shm.log.info("shm fallback to pure wire for %s: %s",
+                         self._target, self.fallback_reason)
+            self._socket_span = "wire.socket"
+            return super()._handshake(timeout)
+        hello = dataclasses.replace(self._hello, shm=True)
+        sock, ack, reader, tx, rx, peer, reason = shm.connect_hello_shm(
+            self._target, hello, timeout=timeout)
+        self._peer = peer
+        self.fallback_reason = reason
+        # the transport-hop span in the traced RTT breakdown tracks the
+        # plane actually carrying data frames
+        self._socket_span = "shm.ring" if peer is not None else "wire.socket"
+        return sock, ack, reader, tx, rx
+
+    def _teardown_peer(self) -> None:
+        if self._peer is not None:
+            self._peer.close()
+            self._peer = None
+
+    # -- metering (ring plane -> comms["shm"]) -------------------------------
+    def _tx_shm(self, n: int) -> None:
+        if self._comms is not None:
+            if self._failing_over:
+                self._comms.record_failover_tx(n)
+            else:
+                self._comms.record_shm_tx(n)
+
+    def _rx_shm(self, n: int) -> None:
+        if self._comms is not None:
+            if self._failing_over:
+                self._comms.record_failover_rx(n)
+            else:
+                self._comms.record_shm_rx(n)
+
+    def _record_rtt(self, rtt: float) -> None:
+        if self._comms is None:
+            return
+        if self._peer is not None:
+            self._comms.record_shm_rtt(rtt)
+        else:
+            self._comms.record_wire_rtt(rtt)
+
+    # -- data plane ----------------------------------------------------------
+    _SEND_DEADLINE_S = 60.0   # ring-full backpressure cap (server dead?)
+
+    def _transmit(self, buf: bytes) -> None:
+        peer = self._peer
+        if peer is None:
+            return super()._transmit(buf)
+        mv = memoryview(buf)
+        off = 0
+        deadline = time.monotonic() + self._SEND_DEADLINE_S
+        while off < len(mv):
+            off += peer.send_all(mv[off:],
+                                 timeout=deadline - time.monotonic(),
+                                 wake_fds=(self._sock.fileno(),))
+            if off >= len(mv):
+                break
+            # the ring is full AND the control socket has traffic (or
+            # the deadline passed): service control frames — a dead
+            # server surfaces here as OSError, which callers turn into
+            # failover; backpressure with a live server just resumes
+            self._drain_control()
+            if time.monotonic() > deadline:
+                raise OSError("shm ring backpressure timeout "
+                              f"({self._SEND_DEADLINE_S:.0f}s)")
+        self._tx_shm(len(buf))
+
+    def _drain_control(self) -> None:
+        """Non-blocking read of the control socket (raises OSError on a
+        closed peer so the caller's failover path takes over)."""
+        self._sock.settimeout(0.0)
+        try:
+            data = self._sock.recv(1 << 16)
+        except (BlockingIOError, socket.timeout, InterruptedError):
+            return
+        if not data:
+            raise OSError("server closed control socket")
+        self._rx(len(data))
+        self._on_payloads(self._reader.feed(data))
+
+    def _pump(self, block: bool) -> None:
+        if self._peer is None:
+            return super()._pump(block)
+        import select as _select
+        got = False
+        while True:
+            if self._must_move and not self._flights:
+                self._move_now()
+                if self._peer is None:  # migrated onto a wire sibling
+                    return super()._pump(block and not got)
+            peer = self._peer
+            # ring first (the data plane), then the control socket
+            frames = peer.recv_frames()
+            if frames:
+                self._rx_shm(sum(len(p) + 4 for p in frames))
+                got |= self._on_payloads(frames)
+            try:
+                self._drain_control()
+            except OSError as e:
+                self._failover(f"connection lost: {e}")
+                if self._peer is None:
+                    return super()._pump(block and not got)
+                continue
+            if got or not block:
+                return
+            # nothing yet: sleep on doorbell + socket.  Drain BEFORE the
+            # ring re-check so a wakeup racing the select is never lost
+            peer.db_own.drain()
+            if peer.reader.available():
+                continue
+            _select.select([self._sock.fileno(), peer.fileno()],
+                           [], [], 0.25)
+
+    # -- lifecycle -----------------------------------------------------------
+    def _failover(self, why: str) -> None:
+        self._teardown_peer()
+        super()._failover(why)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        super().close()
+        self._teardown_peer()
+
+
 def make_worker(transport: str, catchup_fn, params, cache, *,
                 latency_s: Optional[float] = None,
                 wire_opts: Optional[Dict[str, Any]] = None) -> ServerWorker:
@@ -799,17 +1027,18 @@ def make_worker(transport: str, catchup_fn, params, cache, *,
         if latency_s:
             raise ValueError("inproc transport has no latency model")
         return ServerWorker(catchup_fn, params, cache)
-    if transport == "wire":
+    if transport in ("wire", "shm"):
         if latency_s:
             raise ValueError(
-                "wire transport has no simulated latency: RTT is measured "
-                "on the real socket (drop latency_s)")
+                f"{transport} transport has no simulated latency: RTT is "
+                "measured on the real socket (drop latency_s)")
         if not wire_opts or "address" not in wire_opts:
             raise ValueError(
-                "wire transport needs wire_opts={'address': ...} pointing "
-                "at a running correction server (python -m "
+                f"{transport} transport needs wire_opts={{'address': ...}} "
+                "pointing at a running correction server (python -m "
                 "repro.launch.server)")
-        return SocketWorker(cache, **wire_opts)
+        cls = SocketWorker if transport == "wire" else ShmWorker
+        return cls(cache, **wire_opts)
     kw = {} if latency_s is None else {"latency_s": latency_s}
     if transport == "stream":
         return StreamWorker(catchup_fn, params, cache, **kw)

@@ -375,21 +375,24 @@ class CollaborativeEngine:
         ``ServerWorker`` and set up the dispatch/merge layer.
 
         transport: "inproc" | "stream" | "thread" | "mock_remote" | "wire"
-        (see async_rpc; "stream" overlaps via JAX async dispatch; "wire"
-        talks to a standalone correction-server PROCESS over a socket —
-        the real boundary, RTT/bytes measured not simulated).
+        | "shm" (see async_rpc; "stream" overlaps via JAX async dispatch;
+        "wire" talks to a standalone correction-server PROCESS over a
+        socket — the real boundary, RTT/bytes measured not simulated;
+        "shm" is the wire protocol with the data plane moved into a
+        same-host shared-memory ring pair, falling back to plain wire
+        when the server is remote or offers no arena).
         max_staleness: merge window — 0 is the strict synchronous
         fallback (bit-identical to ``_step``); k >= 1 lets a reply land
         1..k steps after its trigger, blocking the edge loop only at k.
         latency_s: simulated server round trip (stream/thread/mock_remote);
-        None keeps the transport's own default.  Rejected for "wire".
-        address: "wire" only — the server's UDS path or "host:port"
-        (start one with ``python -m repro.launch.server``).  With "wire"
+        None keeps the transport's own default.  Rejected for "wire"/"shm".
+        address: "wire"/"shm" only — the server's UDS path or "host:port"
+        (start one with ``python -m repro.launch.server``).  With these
         the server process owns the session's server cache; the engine's
         local server cache stays cold and only ``server_pos`` (carried by
         replies) comes home.
-        wire_coalesce: "wire" only — opt this session out of server-side
-        request coalescing (per-request replays) when False.
+        wire_coalesce: "wire"/"shm" only — opt this session out of
+        server-side request coalescing (per-request replays) when False.
         """
         from repro.serving import async_rpc
         if self._dispatcher is not None:
@@ -397,7 +400,7 @@ class CollaborativeEngine:
         self._check_not_detached()
         if worker is None:
             wire_opts = None
-            if transport == "wire" and address is not None:
+            if transport in ("wire", "shm") and address is not None:
                 wire_opts = dict(address=address, batch=self.batch,
                                  max_len=self.max_len,
                                  tok_tail=tuple(self._history.shape[2:]),
@@ -436,12 +439,23 @@ class CollaborativeEngine:
             # one request per same-position cohort, so every request keeps
             # the scalar-t backlog/wire semantics (a uniform pool is the
             # single-request special case, bit-identical to before)
-            for p in sorted(set(t_vec[triggered].tolist())):
-                mask_p = triggered & (t_vec == p)
-                self._dispatcher.dispatch(
-                    t=int(p), triggered=mask_p,
-                    server_pos=self._dispatch_pos, history=self._history,
-                    u=u, step_t=self.t)
+            # cork the socket workers around the cohort fan-out: N
+            # same-tick requests leave in ONE transmit (the client half
+            # of wire micro-batching; a no-op for local transports)
+            worker = self._worker
+            corked = hasattr(worker, "cork")
+            if corked:
+                worker.cork()
+            try:
+                for p in sorted(set(t_vec[triggered].tolist())):
+                    mask_p = triggered & (t_vec == p)
+                    self._dispatcher.dispatch(
+                        t=int(p), triggered=mask_p,
+                        server_pos=self._dispatch_pos, history=self._history,
+                        u=u, step_t=self.t)
+            finally:
+                if corked:
+                    worker.uncork()
             self.comms.update_per_stream(shipped, active.astype(np.int64))
             self._dispatch_pos = np.where(triggered, t_vec + 1,
                                           self._dispatch_pos)
@@ -496,7 +510,7 @@ class CollaborativeEngine:
         self._drain_async()
         self.server.cache = self._worker.cache
         self.server.pos = int(self.server_pos.max())
-        if getattr(self._worker, "kind", None) == "wire":
+        if getattr(self._worker, "kind", None) in ("wire", "shm"):
             # the worker's cache is the engine's untouched cold cache (the
             # real one lived — and died — in the server process): any
             # further serving on this engine would be silently wrong
@@ -518,7 +532,7 @@ class CollaborativeEngine:
             self._drain_async()
         self.edge.zero_rows(rows)
         if (self._dispatcher is not None
-                and getattr(self._worker, "kind", None) == "wire"):
+                and getattr(self._worker, "kind", None) in ("wire", "shm")):
             self._worker.attach_slot(slot)
         elif self._dispatcher is not None:
             # the worker owns the server cache for the session; after the
@@ -548,7 +562,7 @@ class CollaborativeEngine:
         drained first so no in-flight reply can land on the freed slot."""
         if self._dispatcher is not None:
             self._drain_async()
-            if getattr(self._worker, "kind", None) == "wire":
+            if getattr(self._worker, "kind", None) in ("wire", "shm"):
                 self._worker.detach_slot(slot)
         self.active[slot] = False
 

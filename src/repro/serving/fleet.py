@@ -223,13 +223,13 @@ class ThreadServer(ServerHandle):
     SIGKILL looks like from the client's side of the wire)."""
 
     def __init__(self, name: str, *, cfg, params, slots: int, max_len: int,
-                 root: str, coalesce: bool = True):
+                 root: str, coalesce: bool = True, shm: bool = False):
         super().__init__(name)
         from repro.serving.server import CorrectionServer
         self.uds = os.path.join(root, f"{name}.sock")
         self.srv = CorrectionServer(cfg, params, slots=slots,
                                     max_len=max_len, uds=self.uds,
-                                    coalesce=coalesce)
+                                    coalesce=coalesce, shm=shm)
         self.address = self.srv.address
         self._stop = threading.Event()
         self._thread = threading.Thread(
@@ -305,7 +305,7 @@ class FleetSupervisor:
                  heartbeat_timeout_s: float = 5.0, respawn: bool = True,
                  tracker: Optional[Tracker] = None,
                  cfg=None, params=None, ckpt_dir: Optional[str] = None,
-                 coalesce: bool = True,
+                 coalesce: bool = True, shm: bool = False,
                  stats_interval_s: float = 0.25,
                  spawn_timeout_s: Optional[float] = None,
                  address_wrapper: Optional[Callable[[str], str]] = None):
@@ -322,6 +322,7 @@ class FleetSupervisor:
         self.respawn = respawn
         self.tracker = tracker
         self.ckpt_dir, self.coalesce = ckpt_dir, coalesce
+        self.shm = shm   # servers offer same-host shm arenas on HELLO
         self.stats_interval_s = stats_interval_s
         if spawn_timeout_s is None:
             spawn_timeout_s = float(
@@ -366,16 +367,20 @@ class FleetSupervisor:
         name = f"srv-{self._seq}"
         self._seq += 1
         if self.backend == "subprocess":
+            extra = () if self.coalesce else ("--no-coalesce",)
+            if self.shm:
+                extra += ("--transport", "shm")
             h: ServerHandle = SubprocessServer(
                 name, arch=self.arch, slots=self.slots,
                 max_len=self.max_len, root=self.root,
                 ckpt_dir=self.ckpt_dir,
                 stats_interval_s=self.stats_interval_s,
-                extra_args=() if self.coalesce else ("--no-coalesce",))
+                extra_args=extra)
         else:
             h = ThreadServer(name, cfg=self.cfg, params=self.params,
                              slots=self.slots, max_len=self.max_len,
-                             root=self.root, coalesce=self.coalesce)
+                             root=self.root, coalesce=self.coalesce,
+                             shm=self.shm)
         self.servers[name] = h
         return h
 

@@ -48,14 +48,25 @@ bench's per-request baseline), in which case its requests replay one by
 one, still in arrival order.
 
 The event loop is a single-threaded ``selectors`` reactor: drain every
-readable socket, then run at most one coalesced replay, then flush
-writes.  JAX compute happens on the loop thread — the server is itself a
-batched inference engine, not a proxy.  Run it with
+readable socket (and every session doorbell, for shared-memory
+sessions), then run at most one coalesced replay, then flush writes.
+JAX compute happens on the loop thread — the server is itself a batched
+inference engine, not a proxy.  Run it with
 ``python -m repro.launch.server`` (see that module for the CLI) or embed
 it in a thread via ``serve_forever(stop=threading.Event())`` (tests).
+
+Same-host shared-memory sessions (``shm=True`` + a v5 client asking for
+it): the HELLO_ACK carries an arena offer and its fds via SCM_RIGHTS,
+data frames then move through the arena's ring pair
+(``serving/shm.py``) while every control frame stays on the socket.
+The reactor registers each session's doorbell fd alongside the sockets
+— ring traffic wakes the same ``select``, no busy-spinning — and the
+server NEVER blocks on a full reply ring: residue buffers in the
+session and flushes when the client's consume-side doorbell fires.
 """
 from __future__ import annotations
 
+import logging
 import selectors
 import socket
 import threading
@@ -70,10 +81,17 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import decomposition as deco
 from repro.observability import MetricsRegistry, Tracer
+from repro.serving import shm as shm_mod
 from repro.serving import wire
 from repro.serving.collaborative import CollaborativeEngine
 from repro.serving.engine import cache_batch_axes, zero_cache_rows
 from repro.serving.tracker import Histogram, Tracker
+
+log = logging.getLogger("repro.serving.server")
+
+# sendmsg gather limit per flush: comfortably under any IOV_MAX (Linux
+# has 1024); a tick queueing more frames than this simply loops
+_IOV_MAX = 64
 
 
 @dataclass
@@ -88,7 +106,12 @@ class Session:
     coalesce: bool = True
     client: str = "?"
     reader: wire.FrameReader = field(default_factory=wire.FrameReader)
-    out: bytearray = field(default_factory=bytearray)
+    # per-frame output buffers, gathered into ONE sendmsg per flush
+    out: List[bytes] = field(default_factory=list)
+    # -- shared-memory transport (serving/shm.py) ---------------------------
+    shm_arena: Optional["shm_mod.ServerArena"] = None  # offered at HELLO
+    shm_live: bool = False     # client confirmed with SHM_OPEN(ok=True)
+    shm_out: bytearray = field(default_factory=bytearray)  # reply-ring residue
 
     @property
     def hi(self) -> int:
@@ -104,10 +127,16 @@ class CorrectionServer:
                  coalesce: bool = True, mesh: Optional[str] = None,
                  tracker: Optional[Tracker] = None,
                  tracer: Optional[Tracer] = None,
-                 stats_interval_s: float = 0.5):
+                 stats_interval_s: float = 0.5,
+                 shm: bool = False,
+                 shm_ring_bytes: int = shm_mod.DEFAULT_RING_BYTES):
         self.cfg, self.m = cfg, cfg.monitor
         self.slots, self.max_len = int(slots), int(max_len)
         self.coalesce = bool(coalesce)   # server-wide kill switch
+        # offer a shared-memory arena to v5 clients that ask for one
+        # (same-host UDS connections only; TCP peers stay pure-wire)
+        self.shm = bool(shm)
+        self.shm_ring_bytes = int(shm_ring_bytes)
         # the replay core IS the engine's jitted masked catch-up: one
         # CollaborativeEngine at batch=slots supplies the compiled
         # _catchup_impl and the super-batch server cache.  (Its edge tower
@@ -150,7 +179,14 @@ class CorrectionServer:
         self.metrics = MetricsRegistry()
         for name in ("requests", "replays", "coalesced", "sessions",
                      "bytes_rx", "bytes_tx", "attaches", "detaches",
-                     "defrags", "refused_draining"):
+                     "defrags", "refused_draining",
+                     # tx_flushes counts sendmsg syscalls: frames queued
+                     # in one tick gather into ONE flush (the
+                     # micro-batching regression gauge)
+                     "tx_flushes",
+                     # ring-plane bytes, metered separately from the
+                     # socket so shm payloads are never silently free
+                     "shm_bytes_rx", "shm_bytes_tx", "shm_sessions"):
             self.metrics.counter(name)   # pre-create: zeros still report
         # replay compute time per coalesced group (seconds)
         self.metrics.histogram("replay_s", 1e-5, 60.0)
@@ -336,21 +372,35 @@ class CorrectionServer:
         self.metrics.inc("defrags")
 
     # -- socket plumbing -----------------------------------------------------
-    def _send(self, sess: Session, data: bytes) -> None:
-        sess.out.extend(data)
-        self._flush(sess)
+    def _send(self, sess: Session, data: bytes, *,
+              flush: bool = True) -> None:
+        """Queue a frame; ``flush=False`` defers the syscall so a tick
+        that produces many frames for one session (a coalesced replay's
+        reply fan-out) gathers them into ONE ``sendmsg``."""
+        sess.out.append(data)
+        if flush:
+            self._flush(sess)
 
     def _flush(self, sess: Session) -> None:
         while sess.out:
             try:
-                n = sess.conn.send(sess.out)
+                n = sess.conn.sendmsg(sess.out[:_IOV_MAX])
             except (BlockingIOError, InterruptedError):
                 break
             except OSError:
                 self._drop(sess)
                 return
-            del sess.out[:n]
             self.metrics.inc("bytes_tx", n)
+            self.metrics.inc("tx_flushes")
+            # retire fully-sent buffers; re-head a partially-sent one
+            while n > 0:
+                head = sess.out[0]
+                if n >= len(head):
+                    n -= len(head)
+                    sess.out.pop(0)
+                else:
+                    sess.out[0] = head[n:]
+                    n = 0
         events = selectors.EVENT_READ | (selectors.EVENT_WRITE if sess.out
                                          else 0)
         try:
@@ -358,7 +408,115 @@ class CorrectionServer:
         except KeyError:
             pass
 
+    # -- shared-memory plumbing (serving/shm.py) -----------------------------
+    def _send_reply(self, sess: Session, data: bytes) -> None:
+        """Data-plane send: the reply ring when the session is shm-live,
+        the (deferred, gathered) socket path otherwise."""
+        if sess.shm_live:
+            sess.shm_out.extend(data)
+            self._shm_flush(sess)
+        else:
+            self._send(sess, data, flush=False)
+
+    def _shm_flush(self, sess: Session) -> None:
+        """Move reply residue into the ring — as much as fits.  The
+        server never blocks here: leftovers stay buffered and this runs
+        again when the client's consume rings our doorbell."""
+        arena = sess.shm_arena
+        if arena is None or not sess.shm_out:
+            return
+        wrote = 0
+        while sess.shm_out:
+            n = arena.peer.writer.write(sess.shm_out)
+            if n == 0:
+                break
+            del sess.shm_out[:n]
+            wrote += n
+        if wrote:
+            self.metrics.inc("shm_bytes_tx", wrote)
+            arena.peer.db_peer.ring()
+
+    def _shm_wake(self, sess: Session) -> None:
+        """Session doorbell fired: the client produced requests and/or
+        consumed replies.  Drain-then-check so a ring racing the select
+        is never lost."""
+        arena = sess.shm_arena
+        if arena is None or sess.conn not in self._sessions:
+            return
+        arena.peer.db_own.drain()
+        self._shm_flush(sess)           # the client may have freed space
+        try:
+            frames = arena.peer.recv_frames()
+        except wire.WireError as e:
+            try:
+                self._send(sess, wire.encode_error(str(e)))
+            finally:
+                self._drop(sess)
+            return
+        for p in frames:
+            if sess.conn not in self._sessions:
+                return
+            self.metrics.inc("shm_bytes_rx", len(p) + 4)
+            try:
+                self._handle(sess, wire.decode(p))
+            except wire.WireError as e:
+                try:
+                    self._send(sess, wire.encode_error(str(e)))
+                finally:
+                    self._drop(sess)
+                return
+
+    def _offer_shm(self, sess: Session) -> bool:
+        """Answer a shm-requesting HELLO with an arena offer: the ack
+        frame plus the arena/doorbell fds in ONE sendmsg (SCM_RIGHTS),
+        after which the arena file is unlinked — the crash-safe window
+        closes before the client even replies.  Returns False (and
+        leaks nothing) when anything fails; the caller then sends the
+        plain ack and the session stays pure-wire."""
+        if sess.out:
+            self._flush(sess)
+            if sess.out:
+                return False  # can't append fds to a backlogged stream
+        try:
+            arena = shm_mod.ServerArena.create(self.shm_ring_bytes)
+        except (OSError, shm_mod.ShmError) as e:
+            log.warning("arena creation failed (%s); session %d stays on "
+                        "wire", e, sess.sid)
+            return False
+        buf = wire.encode_hello_ack(wire.HelloAck(
+            sess.sid, sess.lo, self.max_len, shm_path=arena.path,
+            ring_bytes=arena.ring_bytes, db_kind=arena.db_kind))
+        try:
+            n = socket.send_fds(sess.conn, [buf], arena.fds())
+        except OSError as e:
+            arena.close()
+            log.warning("SCM_RIGHTS send failed (%s); session %d stays on "
+                        "wire", e, sess.sid)
+            return False
+        arena.sent()  # fds are kernel-referenced in flight: unlink now
+        sess.shm_arena = arena
+        self.metrics.inc("bytes_tx", n)
+        self.metrics.inc("tx_flushes")
+        if n < len(buf):  # partial ack frame: finish on the normal path
+            sess.out.append(buf[n:])
+            self._flush(sess)
+        return True
+
+    def _shm_teardown(self, sess: Session) -> None:
+        arena = sess.shm_arena
+        if arena is None:
+            return
+        try:
+            self._sel.unregister(arena.peer.fileno())
+        except (KeyError, ValueError):
+            pass
+        arena.close()
+        sess.shm_arena = None
+        sess.shm_live = False
+        sess.shm_out.clear()
+
     def _drop(self, sess: Session) -> None:
+        self._shm_teardown(sess)
         try:
             self._sel.unregister(sess.conn)
         except (KeyError, ValueError):
@@ -468,8 +626,30 @@ class CorrectionServer:
             sess.client = msg.client
             self._reset_rows(lo, lo + msg.batch)
             self.metrics.inc("sessions")
+            if (self.shm and msg.shm
+                    and sess.conn.family == socket.AF_UNIX):
+                if self._offer_shm(sess):
+                    return
             self._send(sess, wire.encode_hello_ack(
                 wire.HelloAck(sess.sid, lo, self.max_len)))
+        elif isinstance(msg, wire.ShmOpen):
+            # the client's verdict on our arena offer: ok moves data
+            # frames to the rings (register the doorbell with the
+            # reactor); a decline tears the arena down — the session
+            # continues pure-wire either way
+            if sess.shm_arena is None:
+                self._send(sess, wire.encode_error("SHM_OPEN without offer"))
+                self._drop(sess)
+                return
+            if msg.ok:
+                sess.shm_live = True
+                self.metrics.inc("shm_sessions")
+                self._sel.register(sess.shm_arena.peer.fileno(),
+                                   selectors.EVENT_READ, ("shm", sess))
+            else:
+                log.info("session %d declined shm offer; staying on wire",
+                         sess.sid)
+                self._shm_teardown(sess)
         elif isinstance(msg, wire.WireRequest):
             if sess.lo < 0:
                 self._send(sess, wire.encode_error("request before HELLO"))
@@ -581,6 +761,7 @@ class CorrectionServer:
             self.tracer.add("server.replay", "server", t0, dt,
                             track="server", coalesced=len(group))
         now = time.monotonic()
+        touched: Dict[int, Session] = {}
         for sess, req, arrived in group:
             # queue wait = arrival -> replay start: the duration-only v4
             # timing payload the client uses to split its measured RTT
@@ -595,10 +776,16 @@ class CorrectionServer:
             fhat = np.asarray(self._fuse(jnp.asarray(req.u),
                                          jnp.asarray(vi),
                                          jnp.asarray(req.triggered)))
-            self._send(sess, wire.encode_reply(wire.WireReply(
+            self._send_reply(sess, wire.encode_reply(wire.WireReply(
                 req.req_id, req.t, req.triggered, vi, fhat,
                 server_time_s=dt / len(group), coalesced=len(group),
                 queue_s=queue_s)))
+            touched[sess.sid] = sess
+        # ONE gathered flush per session for every reply this tick
+        # queued (the micro-batching fix: k frames, one sendmsg)
+        for sess in touched.values():
+            if sess.conn in self._sessions and not sess.shm_live:
+                self._flush(sess)
 
     def _process_pending(self) -> None:
         if not self._pending:
@@ -618,6 +805,11 @@ class CorrectionServer:
         for key, mask in self._sel.select(timeout):
             if key.data == "accept":
                 self._accept()
+                continue
+            if isinstance(key.data, tuple) and key.data[0] == "shm":
+                # a session doorbell: ring traffic (requests in, and/or
+                # reply-ring space freed) — no socket involved
+                self._shm_wake(key.data[1])
                 continue
             sess = self._sessions.get(key.fileobj)
             if sess is None:

@@ -45,12 +45,22 @@ REPLY (``queue_s``: request arrival -> replay start on the server —
 durations only, so no clock sync between the processes is needed);
 together with the existing ``server_time_s``/``coalesced`` fields the
 client assembles the full RTT breakdown (serialize / socket / queue /
-compute) for the observability layer (docs/observability.md).
+compute) for the observability layer (docs/observability.md).  v5 added
+the same-host shared-memory transport negotiation: HELLO grows an
+OPTIONAL trailing ``u8 shm`` request byte, HELLO_ACK an OPTIONAL
+trailing shm offer (arena path + ring geometry + doorbell kind — the
+arena/doorbell fds themselves ride the same UDS via SCM_RIGHTS), and
+SHM_OPEN confirms (or declines) the mapping so the server knows whether
+data frames move to the rings (``serving/shm.py``, docs/transport.md).
+Data frames over the ring use this exact codec unchanged — the rings
+carry the same length-prefixed byte stream a socket would.
 
 Compatibility: the decoder accepts any version in
 ``[MIN_VERSION, VERSION]`` — a v3 REPLY simply has no timing payload
-(``queue_s`` reports -1, "absent") and every other frame body is
-unchanged since v3, so v3 and v4 peers interoperate in both directions.
+(``queue_s`` reports -1, "absent"), a v3/v4 HELLO simply requests no
+shm, and every other frame body is unchanged since v3, so v3..v5 peers
+interoperate in both directions (shm engages only when both ends speak
+it AND share a host).
 Versions below ``MIN_VERSION`` (or above ``VERSION``) are rejected
 loudly on BOTH sides — a v1 peer gets an ERROR frame naming the
 versions, never silent misinterpretation.
@@ -67,7 +77,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 MAGIC = 0xC0AB
-VERSION = 4      # v4: optional REPLY server-timing payload (queue_s)
+VERSION = 5      # v5: shm negotiation (HELLO/HELLO_ACK tails, SHM_OPEN)
 MIN_VERSION = 3  # oldest peer version still decoded (frame-compatible)
 
 MSG_HELLO = 1
@@ -80,6 +90,7 @@ MSG_ATTACH = 7
 MSG_DETACH = 8
 MSG_REDIRECT = 9
 MSG_GOAWAY = 10
+MSG_SHM_OPEN = 11
 
 _HEADER = struct.Struct("<HBB")       # magic, version, msg_type
 _LEN = struct.Struct("<I")            # frame length prefix
@@ -175,6 +186,10 @@ class Hello:
     ``coalesce=False`` opts this session out of the server's request
     coalescing (each request gets its own masked replay) — the bench's
     per-request baseline arm.
+
+    ``shm=True`` (v5) asks the server for a same-host shared-memory ring
+    pair (``serving/shm.py``); a pre-v5 (or wire-only) server simply
+    ignores the trailing byte and the session stays pure-wire.
     """
 
     batch: int
@@ -182,6 +197,7 @@ class Hello:
     tok_tail: Tuple[int, ...] = ()   # (K,) for audio codebooks, else ()
     coalesce: bool = True
     client: str = "edge"
+    shm: bool = False
 
 
 @dataclass
@@ -190,6 +206,13 @@ class HelloAck:
     slot_lo: int        # first super-batch row assigned to this session
     server_max_len: int
     version: int = VERSION
+    # v5 shm offer (present iff ring_bytes > 0): the arena/doorbell fds
+    # ride the SAME sendmsg as this frame via SCM_RIGHTS; ``shm_path``
+    # is informational (the server unlinks it right after sending — the
+    # client maps the received fd, so a SIGKILL leaks no file).
+    shm_path: str = ""
+    ring_bytes: int = 0
+    db_kind: int = 0    # 0 = eventfd (1 fd/doorbell), 1 = pipe (2 fds)
 
 
 @dataclass
@@ -265,12 +288,22 @@ class GoAway:
 
 
 @dataclass
+class ShmOpen:
+    """Client verdict on the server's shm offer: ``ok=True`` moves data
+    frames (REQUEST/REPLY) to the rings; ``ok=False`` (mmap failed,
+    geometry mismatch) tears the arena down and the session continues
+    pure-wire.  Control frames stay on the socket either way."""
+
+    ok: bool
+
+
+@dataclass
 class Error:
     message: str
 
 
 Message = Union[Hello, HelloAck, WireRequest, WireReply, Bye, Attach,
-                Detach, Redirect, GoAway, Error]
+                Detach, Redirect, GoAway, ShmOpen, Error]
 
 
 # -- encode ------------------------------------------------------------------
@@ -279,13 +312,27 @@ def encode_hello(h: Hello) -> bytes:
     body = struct.pack("<IIBB", h.batch, h.max_len, len(h.tok_tail),
                        1 if h.coalesce else 0)
     body += struct.pack(f"<{len(h.tok_tail)}I", *h.tok_tail)
-    return frame(_header(MSG_HELLO) + body + _pack_str(h.client))
+    body += _pack_str(h.client)
+    if h.shm:
+        # v5 shm request: appended after the client string so a decoder
+        # detects it by presence (a v3/v4-shaped frame ends earlier)
+        body += struct.pack("<B", 1)
+    return frame(_header(MSG_HELLO) + body)
 
 
 def encode_hello_ack(a: HelloAck) -> bytes:
     body = struct.pack("<IIIB", a.session_id, a.slot_lo, a.server_max_len,
                        a.version)
+    if a.ring_bytes > 0:
+        # v5 shm offer: presence-detected tail (the fds travel in the
+        # same sendmsg as SCM_RIGHTS ancillary data)
+        body += (_pack_str(a.shm_path)
+                 + struct.pack("<IB", a.ring_bytes, a.db_kind))
     return frame(_header(MSG_HELLO_ACK) + body)
+
+
+def encode_shm_open(ok: bool) -> bytes:
+    return frame(_header(MSG_SHM_OPEN) + struct.pack("<B", 1 if ok else 0))
 
 
 def encode_request(req_id: int, t: int, triggered: np.ndarray,
@@ -377,10 +424,19 @@ def decode(payload: bytes) -> Message:
             tail = struct.unpack_from(f"<{n_tail}I", payload, off)
             off += 4 * n_tail
             client, off = _unpack_str(payload, off)
-            return Hello(batch, max_len, tuple(tail), bool(coal), client)
+            # v5 shm-request byte, detected by presence (older frames end
+            # at the client string)
+            shm = off < len(payload) and payload[off] != 0
+            return Hello(batch, max_len, tuple(tail), bool(coal), client,
+                         shm)
         if msg_type == MSG_HELLO_ACK:
             sid, lo, sml, ver = struct.unpack_from("<IIIB", payload, off)
-            return HelloAck(sid, lo, sml, ver)
+            off += struct.calcsize("<IIIB")
+            shm_path, ring_bytes, db_kind = "", 0, 0
+            if off < len(payload):  # v5 shm offer, presence-detected
+                shm_path, off = _unpack_str(payload, off)
+                ring_bytes, db_kind = struct.unpack_from("<IB", payload, off)
+            return HelloAck(sid, lo, sml, ver, shm_path, ring_bytes, db_kind)
         if msg_type == MSG_REQUEST:
             req_id, t = struct.unpack_from("<QI", payload, off)
             off += struct.calcsize("<QI")
@@ -420,6 +476,9 @@ def decode(payload: bytes) -> Message:
         if msg_type == MSG_GOAWAY:
             reason, off = _unpack_str(payload, off)
             return GoAway(reason)
+        if msg_type == MSG_SHM_OPEN:
+            (ok,) = struct.unpack_from("<B", payload, off)
+            return ShmOpen(bool(ok))
         if msg_type == MSG_ERROR:
             message, off = _unpack_str(payload, off)
             return Error(message)
@@ -453,10 +512,115 @@ class FrameReader:
             del self._buf[:_LEN.size + n]
 
 
+# -- shared-memory rings -----------------------------------------------------
+#
+# One SPSC byte ring = a 128-byte header (u64 head cursor at +0, u64
+# tail cursor at +64 — separate cache lines) followed by ``size`` data
+# bytes.  Cursors increase monotonically and never wrap (u64 at ring
+# throughput outlives the hardware); the data index is ``cursor % size``.
+# The producer writes only ``head``, the consumer only ``tail`` — with
+# one writer per cursor an 8-byte aligned store is the only
+# synchronization needed (CPython's GIL orders the surrounding memcpys;
+# see docs/transport.md for the safety argument).
+#
+# The rings carry the SAME length-prefixed byte stream a socket would:
+# ``RingWriter.write`` is ``send`` (writes what fits, two memcpys across
+# the wrap), ``RingReader.read`` is ``recv`` — so partial frames across
+# the wrap point, frames larger than the ring, and backpressure all
+# reduce to the stream semantics ``FrameReader`` already handles.
+
+RING_HDR = 128          # u64 head @ +0, u64 tail @ +64
+_CURSOR = struct.Struct("<Q")
+
+
+class _RingSide:
+    """Shared geometry/cursor plumbing for one ring over any writable
+    buffer (an ``mmap`` arena or a plain ``bytearray`` in tests)."""
+
+    def __init__(self, buf, offset: int, size: int):
+        if size <= 0:
+            raise WireError(f"ring size must be positive, got {size}")
+        self._buf = buf
+        self._head_off = offset
+        self._tail_off = offset + 64
+        self._data_off = offset + RING_HDR
+        self.size = size
+
+    def _load(self, off: int) -> int:
+        return _CURSOR.unpack_from(self._buf, off)[0]
+
+    def _store(self, off: int, value: int) -> None:
+        _CURSOR.pack_into(self._buf, off, value)
+
+
+class RingWriter(_RingSide):
+    """Producer side: ``write`` as much of ``data`` as fits (0 when the
+    ring is full — the caller loops like ``sendall``, waiting on the
+    consumer's doorbell for space)."""
+
+    def free(self) -> int:
+        return self.size - (self._load(self._head_off)
+                            - self._load(self._tail_off))
+
+    def write(self, data) -> int:
+        head = self._load(self._head_off)
+        n = min(len(data), self.size - (head - self._load(self._tail_off)))
+        if n <= 0:
+            return 0
+        i = head % self.size
+        first = min(n, self.size - i)
+        base = self._data_off
+        self._buf[base + i:base + i + first] = bytes(data[:first])
+        if n > first:  # wrap: the remainder lands at the ring start
+            self._buf[base:base + (n - first)] = bytes(data[first:n])
+        self._store(self._head_off, head + n)  # publish AFTER the copy
+        return n
+
+
+class RingReader(_RingSide):
+    """Consumer side: ``read`` drains whatever is available (advancing
+    ``tail`` frees the space), ``frames`` feeds it straight through an
+    internal ``FrameReader`` so callers get complete frame payloads."""
+
+    def __init__(self, buf, offset: int, size: int):
+        super().__init__(buf, offset, size)
+        self.reader = FrameReader()
+
+    def available(self) -> int:
+        return self._load(self._head_off) - self._load(self._tail_off)
+
+    def read(self, limit: Optional[int] = None) -> bytes:
+        tail = self._load(self._tail_off)
+        n = self._load(self._head_off) - tail
+        if limit is not None:
+            n = min(n, limit)
+        if n <= 0:
+            return b""
+        i = tail % self.size
+        first = min(n, self.size - i)
+        base = self._data_off
+        out = bytes(self._buf[base + i:base + i + first])
+        if n > first:
+            out += bytes(self._buf[base:base + (n - first)])
+        self._store(self._tail_off, tail + n)  # free AFTER the copy
+        return out
+
+    def frames(self) -> List[bytes]:
+        data = self.read()
+        return self.reader.feed(data) if data else []
+
+
 # -- addressing --------------------------------------------------------------
 
 def parse_address(address: str) -> Tuple[int, Union[str, Tuple[str, int]]]:
-    """"/path/to.sock" -> (AF_UNIX, path); "host:port" -> (AF_INET, (h, p))."""
+    """"/path/to.sock" -> (AF_UNIX, path); "host:port" -> (AF_INET, (h, p)).
+
+    ``shm:ADDR`` strips the prefix and parses ADDR — the shared-memory
+    transport's CONTROL channel is an ordinary socket (the rings are
+    negotiated over it; ``serving/shm.py``), so a shm address is just a
+    socket address wearing a transport hint."""
+    if address.startswith("shm:"):
+        return parse_address(address[len("shm:"):])
     if ":" in address and not address.startswith("/"):
         host, _, port = address.rpartition(":")
         return socket.AF_INET, (host or "127.0.0.1", int(port))

@@ -100,6 +100,29 @@ class _Link:
         self.kill()
 
 
+def torn_ring_write(writer, payload: bytes,
+                    rng: Optional[random.Random] = None) -> int:
+    """The shm-plane mirror of ``drop_mid_frame``: publish only a PREFIX
+    of the framed ``payload`` into ``writer`` (a ``wire.RingWriter``), as
+    a producer that died mid-stream would — at least the length prefix,
+    never the whole frame.  Returns the number of bytes published.
+
+    The consumer's ``FrameReader`` must hold the torn frame forever
+    without yielding or corrupting (rings carry stream semantics: a torn
+    write is indistinguishable from a stream cut); peer death is then
+    detected out-of-band on the control socket, exactly like the socket
+    torn-frame case."""
+    buf = wire.frame(payload)
+    rng = rng or random.Random(0)
+    n = max(1, min(len(buf) - 1, rng.randint(1, len(buf) - 1)))
+    done = 0
+    while done < n:
+        w = writer.write(buf[done:n])
+        assert w > 0, "ring full while tearing a write (size the test ring)"
+        done += w
+    return n
+
+
 class ChaosProxy:
     """Frame-aware fault-injecting proxy; see module docstring."""
 

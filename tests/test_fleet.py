@@ -64,11 +64,13 @@ def world():
 
 
 @contextmanager
-def fleet(cfg, params, *, n=2, slots=8, respawn=False, wrapper=None):
+def fleet(cfg, params, *, n=2, slots=8, respawn=False, wrapper=None,
+          shm=False):
     """A thread-backend fleet with a daemon supervisor loop ticking it."""
     sup = FleetSupervisor(backend="thread", n_servers=n, slots=slots,
                           max_len=MAX_LEN, cfg=cfg, params=params,
-                          respawn=respawn, address_wrapper=wrapper)
+                          respawn=respawn, address_wrapper=wrapper,
+                          shm=shm)
     sup.start()
     stop = threading.Event()
     t = threading.Thread(target=sup.run_forever, args=(stop,), daemon=True)
@@ -81,7 +83,8 @@ def fleet(cfg, params, *, n=2, slots=8, respawn=False, wrapper=None):
         sup.close()
 
 
-def run_session(sup, params, cfg, stream, *, staleness, at=None):
+def run_session(sup, params, cfg, stream, *, staleness, at=None,
+                kind="wire"):
     """Serve ``stream`` step-by-step through the fleet router, firing
     ``at[i](sup, eng, sess)`` after step i.  Returns (stacked traces,
     comms report, engine)."""
@@ -89,7 +92,7 @@ def run_session(sup, params, cfg, stream, *, staleness, at=None):
     eng = CollaborativeEngine(params, cfg, batch=batch, max_len=MAX_LEN)
     scfg = SessionConfig(
         mode="async", max_staleness=staleness,
-        transport=TransportSpec("wire",
+        transport=TransportSpec(kind,
                                 address="fleet:" + sup.router_address))
     out = []
     with eng.session(scfg) as s:

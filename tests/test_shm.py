@@ -1,0 +1,482 @@
+"""Same-host shared-memory transport (``serving/shm.py``): ring codec
+properties (wrap straddling, backpressure, torn writes), the arena
+handshake + lifecycle (unlink-after-mmap crash safety), end-to-end
+bitwise identity over ``TransportSpec("shm", ...)``, the server's
+gathered reply flush (wire micro-batching), and failover-by-replay out
+of a dead shm session onto a plain-wire fleet sibling."""
+import dataclasses
+import os
+import socket
+import struct
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from _chaos import torn_ring_write
+from repro.configs.paper_synthetic import SERVING
+from repro.core import decomposition as deco
+from repro.data import tokens as tok
+from repro.serving import SessionConfig, TransportSpec, shm, wire
+from repro.serving.collaborative import CollaborativeEngine
+from repro.serving.server import CorrectionServer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(threshold=0.1):
+    return SERVING.replace(monitor=SERVING.monitor.__class__(
+        **{**SERVING.monitor.__dict__, "threshold": threshold,
+           "trigger_margin": 0.0}))
+
+
+def _uds_path(tag):
+    return os.path.join(tempfile.mkdtemp(prefix=f"shm_{tag}_"), "s.sock")
+
+
+def _ring_pair(size):
+    """A writer/reader pair over one in-memory ring (no mmap needed:
+    the ring layer only asks for a writable buffer)."""
+    buf = bytearray(wire.RING_HDR + size)
+    return wire.RingWriter(buf, 0, size), wire.RingReader(buf, 0, size)
+
+
+# -- the byte rings ----------------------------------------------------------
+
+class TestRings:
+    @settings(max_examples=40, deadline=None)
+    @given(size=st.integers(min_value=32, max_value=257),
+           sizes=st.lists(st.integers(min_value=0, max_value=300),
+                          min_size=1, max_size=12),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_framed_round_trip_with_wrap(self, size, sizes, seed):
+        """Any schedule of frames — including frames bigger than the
+        ring and frames straddling the wrap point — survives a
+        write-what-fits / drain loop bit-exactly, because the rings
+        carry stream semantics and ``FrameReader`` owns reassembly."""
+        rng = np.random.default_rng(seed)
+        w, r = _ring_pair(size)
+        frames = [rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+                  for n in sizes]
+        got = []
+        for payload in frames:
+            buf = wire.frame(payload)
+            done = 0
+            while done < len(buf):
+                n = w.write(buf[done:])
+                if n == 0:
+                    got.extend(r.frames())   # full: drain, then resume
+                    assert w.free() > 0, "drain must free space"
+                done += n
+        got.extend(r.frames())
+        assert got == frames
+        assert r.available() == 0 and w.free() == size
+
+    def test_ring_full_returns_zero_never_corrupts(self):
+        w, r = _ring_pair(64)
+        payload = bytes(range(60))
+        assert w.write(payload) == 60
+        assert w.write(b"x" * 10) == 4      # partial: only what fits
+        assert w.write(b"y") == 0           # full: refused, not clobbered
+        assert r.read(60) == payload
+        assert r.read() == b"x" * 4
+
+    def test_torn_ring_write_yields_nothing_and_never_raises(self):
+        """The shm mirror of the torn-frame chaos case: a producer that
+        died after publishing part of a frame leaves the consumer
+        holding a partial frame forever — no yield, no corruption, no
+        exception.  Death is detected on the control socket, not here."""
+        w, r = _ring_pair(1 << 12)
+        n = torn_ring_write(w, b"z" * 600)
+        assert 0 < n < 604                  # 4-byte length prefix + body
+        assert r.frames() == []
+        assert r.frames() == []             # idempotent on a cut stream
+        assert r.available() == 0           # all torn bytes consumed...
+        # ...and a resumed stream (same producer back up mid-write is
+        # impossible, but the READER must not have lost sync state)
+        assert r.reader.feed(b"") == []
+
+    def test_oversize_frame_rejected_by_reader(self):
+        w, r = _ring_pair(64)
+        bad = struct.pack("<I", wire.MAX_FRAME_BYTES + 1) + b"\x00" * 10
+        w.write(bad)
+        with pytest.raises(wire.WireError, match="frame"):
+            r.frames()
+
+
+class TestDoorbellBackpressure:
+    def test_blocked_writer_resumes_on_consumer_progress(self):
+        """A real arena + doorbells: the producer blocks when the ring
+        fills and resumes as the consumer frees space — every byte
+        arrives intact, nothing is dropped or reordered."""
+        arena = shm.ServerArena.create(1 << 10)
+        fds = [os.dup(fd) for fd in arena.fds()]
+        client = shm.attach(fds, 1 << 10, arena.db_kind)
+        arena.sent()                        # fd closed + path unlinked
+        server = arena.peer
+        total = 64 * 1024
+        rng = np.random.default_rng(0)
+        blob = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+        got = bytearray()
+
+        def produce():
+            mv = memoryview(blob)
+            off = 0
+            while off < len(mv):
+                off += client.send_all(mv[off:off + 4096], timeout=30.0)
+
+        t = threading.Thread(target=produce, daemon=True)
+        t.start()
+        deadline = time.monotonic() + 30
+        while len(got) < total:
+            assert time.monotonic() < deadline, "consumer starved"
+            data = server.reader.read()
+            if data:
+                server.db_peer.ring()       # space freed: wake producer
+                got.extend(data)
+            else:
+                server.db_own.drain()
+                if not server.reader.available():
+                    time.sleep(0.001)
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert bytes(got) == blob
+        client.close()
+        arena.close()
+        assert shm.stray_arenas() == []
+
+
+# -- handshake codec (protocol v5 tails) -------------------------------------
+
+class TestHandshakeCodec:
+    def test_hello_shm_flag_presence_detected(self):
+        for flag in (False, True):
+            buf = wire.encode_hello(wire.Hello(4, 16, shm=flag))
+            (p,) = wire.FrameReader().feed(buf)
+            msg = wire.decode(p)
+            assert msg.shm is flag
+        # a v3/v4-shaped HELLO (no tail byte) decodes as shm=False
+        assert wire.decode(
+            wire.FrameReader().feed(wire.encode_hello(
+                wire.Hello(4, 16)))[0]).shm is False
+
+    def test_hello_ack_shm_tail_round_trip(self):
+        ack = wire.HelloAck(7, 3, 64, shm_path="/dev/shm/repro-shm-x",
+                            ring_bytes=1 << 20, db_kind=shm.DB_PIPE)
+        (p,) = wire.FrameReader().feed(wire.encode_hello_ack(ack))
+        got = wire.decode(p)
+        assert got == ack
+        plain = wire.HelloAck(7, 3, 64)
+        (p,) = wire.FrameReader().feed(wire.encode_hello_ack(plain))
+        got = wire.decode(p)
+        assert got.ring_bytes == 0 and got.shm_path == ""
+
+    def test_shm_open_round_trip(self):
+        for ok in (False, True):
+            (p,) = wire.FrameReader().feed(wire.encode_shm_open(ok))
+            msg = wire.decode(p)
+            assert isinstance(msg, wire.ShmOpen) and msg.ok is ok
+
+    def test_shm_address_prefix_parses(self):
+        fam, target = wire.parse_address("shm:/tmp/x.sock")
+        assert fam == socket.AF_UNIX and target == "/tmp/x.sock"
+
+
+# -- end-to-end over an in-thread shm server ---------------------------------
+
+@pytest.fixture(scope="module")
+def shm_server():
+    cfg = _cfg()
+    params = deco.init_collab_lm(KEY, cfg)
+    uds = _uds_path("srv")
+    srv = CorrectionServer(cfg, params, slots=8, max_len=32, uds=uds,
+                           shm=True)
+    stop = threading.Event()
+    th = threading.Thread(target=srv.serve_forever,
+                          kwargs=dict(stop=stop), daemon=True)
+    th.start()
+    yield cfg, params, uds, srv
+    stop.set()
+    th.join(timeout=10)
+    srv.close()
+
+
+def _run(eng, stream, *, address, max_staleness, kind="shm"):
+    cfg = SessionConfig(mode="async", max_staleness=max_staleness,
+                        transport=TransportSpec(kind, address=address))
+    with eng.session(cfg) as s:
+        return s.run(stream)
+
+
+class TestShmLoopback:
+    def test_strict_sync_bitwise_and_bytes_in_shm_bucket(self, shm_server):
+        """Acceptance: max_staleness=0 over the rings reproduces the
+        protocol — u/trigger bit-identical to run_scan, fhat matching
+        the in-process sync engine — with the data plane's bytes and
+        RTTs in ``comms["shm"]`` and only handshake/control on the
+        socket."""
+        cfg, params, uds, srv = shm_server
+        stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
+        scan = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        rs = scan.session(SessionConfig(mode="scan")).run(stream)
+        sync = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        r1 = sync.session(SessionConfig()).run(stream)
+        a = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        r0 = _run(a, stream, address=uds, max_staleness=0)
+        assert 0.0 < r0["triggered"].mean() < 1.0, "need mixed triggers"
+        np.testing.assert_array_equal(r0["u"], rs["u"])
+        np.testing.assert_array_equal(r0["triggered"], rs["triggered"])
+        np.testing.assert_allclose(r0["fhat"], r1["fhat"], atol=1e-6)
+        np.testing.assert_array_equal(a.server_pos, sync.server_pos)
+        rep = r0["comms"]
+        assert rep["bytes_sent"] == r1["comms"]["bytes_sent"]
+        s = rep["shm"]
+        assert s["replies"] == rep["async"]["requests"] > 0
+        assert s["tx_bytes"] > 0 and s["rx_bytes"] > 0
+        assert s["rtt_mean_s"] > 0.0
+        # control plane: a handful of handshake bytes, zero replies
+        w = rep.get("wire")
+        if w is not None:
+            assert w["replies"] == 0
+            assert w["tx_bytes"] < s["tx_bytes"]
+
+    def test_pipelined_fhat_safe_and_no_stray_arenas(self, shm_server):
+        cfg, params, uds, srv = shm_server
+        stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
+        scan = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        rs = scan.session(SessionConfig(mode="scan")).run(stream)
+        a = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        ra = _run(a, stream, address=uds, max_staleness=4)
+        np.testing.assert_array_equal(ra["u"], rs["u"])
+        np.testing.assert_array_equal(ra["triggered"], rs["triggered"])
+        assert bool(np.all(ra["fhat"] <= ra["u"] + 1e-6))
+        assert ra["comms"]["shm"]["replies"] > 0
+        assert shm.stray_arenas() == [], \
+            "arena files must be unlinked as soon as both sides mmap"
+
+    def test_wire_client_against_shm_server_stays_plain(self, shm_server):
+        """A v5 wire client that doesn't ask for shm gets a plain
+        session from an shm-enabled server (the offer is HELLO-gated)."""
+        cfg, params, uds, srv = shm_server
+        stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
+        a = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        r = _run(a, stream, address=uds, max_staleness=0, kind="wire")
+        assert "shm" not in r["comms"]
+        assert r["comms"]["wire"]["replies"] > 0
+
+    def test_shm_client_against_wire_server_falls_back(self):
+        """A plain server offers no arena: the shm transport degrades to
+        pure wire with a recorded reason — never an error."""
+        cfg = _cfg()
+        params = deco.init_collab_lm(KEY, cfg)
+        uds = _uds_path("fallback")
+        srv = CorrectionServer(cfg, params, slots=4, max_len=32, uds=uds)
+        stop = threading.Event()
+        th = threading.Thread(target=srv.serve_forever,
+                              kwargs=dict(stop=stop), daemon=True)
+        th.start()
+        try:
+            from repro.serving import async_rpc
+            stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
+            eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+            scfg = SessionConfig(mode="async", max_staleness=0,
+                                 transport=TransportSpec("shm", address=uds))
+            with eng.session(scfg) as s:
+                out = [s.step(stream[:, i]) for i in range(4)]
+                worker = eng._worker
+                assert isinstance(worker, async_rpc.ShmWorker)
+                assert worker._peer is None
+                assert "no shm arena" in worker.fallback_reason
+                rep = s.report()
+            assert len(out) == 4
+            assert "shm" not in rep and rep["wire"]["replies"] > 0
+        finally:
+            stop.set()
+            th.join(timeout=10)
+            srv.close()
+
+    def test_declined_shm_open_keeps_session_on_wire(self, shm_server):
+        """A client that cannot attach answers SHM_OPEN(ok=0): the
+        server tears the arena down and serves the session pure-wire."""
+        cfg, params, uds, srv = shm_server
+        base_sessions = srv.stats["shm_sessions"]
+        sock = wire.connect(uds, timeout=10)
+        try:
+            sock.settimeout(10.0)
+            sock.sendall(wire.encode_hello(
+                wire.Hello(batch=1, max_len=16, shm=True)))
+            fds = []
+            reader = wire.FrameReader()
+            payloads = []
+            while not payloads:
+                data, new_fds, flags, _ = socket.recv_fds(sock, 1 << 16, 8)
+                assert data, "server closed during handshake"
+                fds.extend(new_fds)
+                payloads = reader.feed(data)
+            ack = wire.decode(payloads[0])
+            assert isinstance(ack, wire.HelloAck)
+            assert ack.ring_bytes > 0 and len(fds) >= 2
+            for fd in fds:
+                os.close(fd)                # simulate a failed attach
+            sock.sendall(wire.encode_shm_open(False))
+            # the session must still answer a plain wire request
+            hist = np.zeros((1, 16), np.int32)
+            sock.sendall(wire.encode_request(
+                1, 0, np.array([True]), np.zeros(1, np.int32),
+                np.zeros(1, np.float32), hist))
+            msgs = []
+            while not msgs:
+                data = sock.recv(1 << 16)
+                assert data, "server dropped a declined-shm session"
+                msgs = [wire.decode(p) for p in reader.feed(data)]
+            assert isinstance(msgs[0], wire.WireReply)
+            assert srv.stats["shm_sessions"] == base_sessions
+        finally:
+            sock.close()
+        deadline = time.monotonic() + 10
+        while shm.stray_arenas() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert shm.stray_arenas() == []
+
+
+# -- the gathered reply flush (wire micro-batching) --------------------------
+
+class TestReplyFlushBatching:
+    def test_multi_reply_tick_is_one_sendmsg(self):
+        """Regression for the per-reply ``send()`` flush: three queued
+        requests answered in one tick must leave in ONE gathered
+        sendmsg — ``tx_flushes`` (a syscall counter) grows by exactly 1
+        while three REPLY frames arrive."""
+        cfg = _cfg()
+        params = deco.init_collab_lm(KEY, cfg)
+        srv = CorrectionServer(cfg, params, slots=2, max_len=16,
+                               uds=_uds_path("flush"))
+        try:
+            sock = wire.connect(srv.address, timeout=5)
+            sock.sendall(wire.encode_hello(wire.Hello(batch=2, max_len=16)))
+            reader = wire.FrameReader()
+            msgs = self._collect(srv, sock, 1, reader)
+            assert isinstance(msgs[0], wire.HelloAck)
+            rng = np.random.default_rng(0)
+            hist = rng.integers(0, 255, (2, 16)).astype(np.int32)
+            trig = np.array([True, False])
+            u = np.zeros(2, np.float32)
+            # three requests land BEFORE the server ticks: they join one
+            # replay group and their replies queue in the same tick
+            for rid, t in ((1, 0), (2, 1), (3, 2)):
+                sock.sendall(wire.encode_request(
+                    rid, t, trig, np.zeros(2, np.int32), u, hist))
+            flushes0 = srv.stats["tx_flushes"]
+            msgs = self._collect(srv, sock, 3, reader)
+            assert [m.req_id for m in msgs] == [1, 2, 3]
+            assert all(isinstance(m, wire.WireReply) for m in msgs)
+            assert srv.stats["tx_flushes"] == flushes0 + 1, \
+                "3 same-tick replies must leave in one gathered sendmsg"
+            sock.close()
+        finally:
+            srv.close()
+
+    @staticmethod
+    def _collect(srv, sock, n, reader):
+        sock.settimeout(0.0)
+        msgs = []
+        deadline = time.monotonic() + 30
+        while len(msgs) < n:
+            srv.serve_tick(0.001)
+            try:
+                data = sock.recv(1 << 16)
+            except (BlockingIOError, socket.timeout):
+                continue
+            assert data, "server closed"
+            msgs.extend(wire.decode(p) for p in reader.feed(data))
+            assert time.monotonic() < deadline
+        return msgs
+
+
+# -- lifecycle: kill an shm session mid-flight -------------------------------
+
+class TestArenaLifecycle:
+    def test_kill_mid_flight_leaves_no_arena_and_raises_peer_gone(self):
+        """SIGKILL emulation on a live shm session: sever the sockets
+        without ceremony.  A direct (non-fleet) client must surface a
+        WireError, and no arena file may survive — the unlink-after-mmap
+        discipline means there is nothing to leak."""
+        cfg = _cfg()
+        params = deco.init_collab_lm(KEY, cfg)
+        uds = _uds_path("kill")
+        srv = CorrectionServer(cfg, params, slots=4, max_len=32, uds=uds,
+                               shm=True)
+        stop = threading.Event()
+        th = threading.Thread(target=srv.serve_forever,
+                              kwargs=dict(stop=stop), daemon=True)
+        th.start()
+        stream = next(tok.lm_batches(0, cfg, 3, 16))["tokens"]
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        scfg = SessionConfig(mode="async", max_staleness=4,
+                             transport=TransportSpec("shm", address=uds))
+        try:
+            with pytest.raises(wire.WireError):
+                with eng.session(scfg) as s:
+                    for i in range(stream.shape[1]):
+                        s.step(stream[:, i])
+                        if i == 6:
+                            # crash: no BYE, no GOAWAY, no flush
+                            stop.set()
+                            th.join(timeout=10)
+                            for sess in list(srv._sessions.values()):
+                                try:
+                                    sess.conn.shutdown(socket.SHUT_RDWR)
+                                except OSError:
+                                    pass
+                            srv.close()
+        finally:
+            stop.set()
+            th.join(timeout=10)
+            srv.close()
+        assert shm.stray_arenas() == [], \
+            "a SIGKILLed shm session must not leak arena files"
+
+    def test_fleet_failover_from_shm_onto_wire_sibling(self):
+        """Failover-by-replay OUT of an shm session: kill the shm
+        server mid-flight; the worker re-HELLOs through the router onto
+        a sibling that offers no arena and finishes the trace pure-wire
+        — bitwise identical to an uninterrupted scan, with the recovery
+        audited in the failover bucket and no arena files left."""
+        from test_fleet import fleet, run_session, victim_of, wait_live
+
+        cfg = _cfg()
+        params = deco.init_collab_lm(KEY, cfg)
+        stream = next(tok.lm_batches(0, cfg, 4, 24))["tokens"]
+        with fleet(cfg, params, n=2, shm=True) as sup:
+            wait_live(sup, 2)
+            ref, ref_rep, _ = run_session(sup, params, cfg, stream,
+                                          staleness=4, kind="shm")
+            assert ref_rep["shm"]["replies"] > 0
+            # heterogeneous failover target: the sibling goes wire-only
+            survivors_made_plain = threading.Event()
+
+            def arm(sup_, eng, s):
+                victim = victim_of(sup_, eng)
+                for h in sup_.servers.values():
+                    if h is not victim:
+                        h.srv.shm = False   # sibling stops offering shm
+                survivors_made_plain.set()
+                victim.kill()
+
+            res, rep, eng = run_session(
+                sup, params, cfg, stream, staleness=4,
+                kind="shm", at={10: arm})
+            assert survivors_made_plain.is_set()
+        np.testing.assert_array_equal(res["u"], ref["u"])
+        np.testing.assert_array_equal(res["triggered"], ref["triggered"])
+        assert bool(np.all(res["fhat"] <= res["u"] + 1e-6))
+        assert rep["failover"]["failovers"] >= 1
+        assert rep["shm"]["replies"] > 0, "pre-kill traffic rode the rings"
+        # post-failover traffic rode the sibling's plain wire: the wire
+        # bucket carried real replies this run
+        assert rep["wire"]["replies"] > 0
+        assert shm.stray_arenas() == []

@@ -146,18 +146,19 @@ class TestCodec:
         """Versions outside the ``[MIN_VERSION, VERSION]`` accept window
         must be rejected with an error NAMING both the version and the
         window — never silent misinterpretation of the old layout.  (v4
-        is frame-compatible with v3 — the optional REPLY timing payload
-        is detected by presence — so v3 itself DECODES; see
-        test_observability.py for that direction.)"""
-        assert wire.VERSION == 4 and wire.MIN_VERSION == 3
+        and v5 are frame-compatible with v3 — the optional REPLY timing
+        payload and the HELLO/HELLO_ACK shm tails are detected by
+        presence — so v3 itself DECODES; see test_observability.py for
+        that direction.)"""
+        assert wire.VERSION == 5 and wire.MIN_VERSION == 3
         good = wire.FrameReader().feed(wire.encode_bye())[0]
         v1 = good[:2] + b"\x01" + good[3:]
         with pytest.raises(wire.WireError,
-                           match=r"version 1.*supported \[3, 4\]"):
+                           match=r"version 1.*supported \[3, 5\]"):
             wire.decode(v1)
-        v5 = good[:2] + b"\x05" + good[3:]
-        with pytest.raises(wire.WireError, match="version 5"):
-            wire.decode(v5)
+        v6 = good[:2] + b"\x06" + good[3:]
+        with pytest.raises(wire.WireError, match="version 6"):
+            wire.decode(v6)
 
     def test_frame_reader_reassembles_any_fragmentation(self):
         frames = [wire.encode_bye(), wire.encode_error("x" * 300),

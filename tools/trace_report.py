@@ -49,14 +49,24 @@ def validate(path: str) -> None:
     print(f"{path}: OK ({n} events)")
 
 
-def smoke(out: str, *, batch: int = 8, steps: int = 24) -> None:
-    """Traced end-to-end wire session against a spawned server process."""
+def smoke(out: str, *, batch: int = 8, steps: int = 24,
+          transport: str = "wire",
+          max_socket_p50_ms: float = None) -> None:
+    """Traced end-to-end session against a spawned server process.
+
+    ``transport="shm"`` starts the server with ``--transport shm`` and
+    attaches through the shared-memory ring pair: the smoke then
+    requires the ``shm.ring`` span group (payload frames must actually
+    ride the rings, not silently fall back to the socket).
+    ``max_socket_p50_ms`` optionally bounds the socket-stage p50 — the
+    CI shm-smoke passes the measured wire baseline here, so a shm run
+    that stops collapsing the transport stage fails loudly."""
     import numpy as np
 
     from repro.configs.paper_synthetic import SERVING
     from repro.core import decomposition as deco
     from repro.launch.server import spawn_subprocess
-    from repro.observability import breakdown_table, load_trace
+    from repro.observability import breakdown, breakdown_table, load_trace
     from repro.serving import MonitorSession, SessionConfig, TransportSpec
 
     import jax
@@ -66,18 +76,22 @@ def smoke(out: str, *, batch: int = 8, steps: int = 24) -> None:
     rng = np.random.default_rng(0)
     stream = rng.integers(0, cfg.vocab_size, (batch, steps)).astype(np.int32)
 
+    extra = ["--idle-exit-s", "30"]
+    if transport == "shm":
+        extra += ["--transport", "shm"]
     tmp = tempfile.mkdtemp(prefix="trace-smoke-")
     uds = os.path.join(tmp, "corr.sock")
     proc = spawn_subprocess("paper-synthetic-serving", uds=uds,
                             slots=batch, max_len=steps + 8,
                             ready_file=os.path.join(tmp, "ready"),
-                            extra_args=("--idle-exit-s", "30"))
+                            extra_args=tuple(extra))
     try:
         # pin the operating point so EVERY step triggers: the smoke must
         # exercise dispatch / wire / server spans, not depend on the data
         config = SessionConfig(mode="async", max_staleness=4, trace=True,
                                threshold=-1e9, trigger_margin=0.0,
-                               transport=TransportSpec("wire", address=uds))
+                               transport=TransportSpec(transport,
+                                                       address=uds))
         session = MonitorSession.open(params, cfg, batch=batch,
                                       max_len=steps + 8, config=config)
         session.run(stream)
@@ -86,12 +100,27 @@ def smoke(out: str, *, batch: int = 8, steps: int = 24) -> None:
         names = {e["name"] for e in obj["traceEvents"] if e.get("ph") == "X"}
         required = {"edge.decode", "edge.trigger", "wire.encode",
                     "wire.request", "server.queue", "server.catchup"}
+        if transport == "shm":
+            # frames must ride the rings: a silent wire fallback would
+            # still pass every other gate
+            required |= {"shm.ring"}
         missing = required - names
         if missing:
             raise SystemExit(f"trace-smoke: missing span groups {missing}")
-        print(f"trace-smoke OK: {n} spans -> {out}")
+        print(f"trace-smoke OK ({transport}): {n} spans -> {out}")
         for line in breakdown_table(obj["traceEvents"]):
             print(line)
+        if max_socket_p50_ms is not None:
+            sock = breakdown(obj["traceEvents"]).get("socket")
+            if sock is None:
+                raise SystemExit("trace-smoke: no socket-stage spans")
+            p50_ms = sock["p50_s"] * 1e3
+            if p50_ms >= max_socket_p50_ms:
+                raise SystemExit(
+                    f"trace-smoke: socket-stage p50 {p50_ms:.3f}ms >= "
+                    f"bound {max_socket_p50_ms:.3f}ms")
+            print(f"socket-stage p50 {p50_ms:.3f}ms < "
+                  f"{max_socket_p50_ms:.3f}ms bound")
     finally:
         proc.terminate()
         proc.wait(timeout=30)
@@ -104,8 +133,16 @@ def main(argv=None) -> None:
     ap.add_argument("--validate", action="store_true",
                     help="schema-validate only (no table)")
     ap.add_argument("--smoke", action="store_true",
-                    help="spawn a server, run a traced wire session, "
-                         "validate + summarize (the CI trace-smoke step)")
+                    help="spawn a server, run a traced session, "
+                         "validate + summarize (the CI trace-smoke and "
+                         "shm-smoke steps)")
+    ap.add_argument("--transport", choices=("wire", "shm"), default="wire",
+                    help="--smoke: transport to drive (shm additionally "
+                         "requires the shm.ring span group)")
+    ap.add_argument("--max-socket-p50-ms", type=float, default=None,
+                    help="--smoke: fail if the socket-stage p50 exceeds "
+                         "this bound (CI shm-smoke passes the measured "
+                         "wire baseline)")
     ap.add_argument("--out", default=None,
                     help="--smoke: where to write the trace "
                          "(default: results/trace_smoke.json)")
@@ -113,7 +150,9 @@ def main(argv=None) -> None:
     if args.smoke:
         if args.trace is not None:
             ap.error("--smoke generates its own trace (drop the argument)")
-        smoke(args.out or "results/trace_smoke.json")
+        smoke(args.out or "results/trace_smoke.json",
+              transport=args.transport,
+              max_socket_p50_ms=args.max_socket_p50_ms)
         return
     if args.trace is None:
         ap.error("need a trace file (or --smoke)")
