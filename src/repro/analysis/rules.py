@@ -134,6 +134,27 @@ def _mutate_sign() -> RuleResult:
                       "flipped-sign corrector was NOT refuted")
 
 
+def _mutate_policy_sign() -> RuleResult:
+    """A runaway threshold policy can at most drive every stream to the
+    always-trigger extreme (thresholds only select WHEN the server is
+    consulted) — so the certificate that must hold there is still the
+    corrector's sign.  Verify the catch-up at that extreme operating
+    point with the sign flipped: the rule must refute it, proving the
+    sign certificates cover every operating point a policy can reach."""
+    from repro.configs import registry
+    cfg = registry.get_smoke("granite-8b")
+    mon = cfg.monitor
+    cfg = cfg.replace(monitor=mon.__class__(
+        **{**mon.__dict__, "threshold": -1e9, "trigger_margin": 0.0}))
+    cert = signs.verify_catchup(cfg, arch="granite-8b", s=-abs(mon.s))
+    fired = not cert.ok
+    return RuleResult("sign-safety",
+                      "mutation: sign flipped at policy always-trigger",
+                      fired, "" if fired else
+                      "flipped-sign catch-up at the policy extreme was "
+                      "NOT refuted")
+
+
 def _mutate_collective() -> RuleResult:
     if jax.device_count() >= 2:
         from jax.experimental.shard_map import shard_map
@@ -189,8 +210,9 @@ def _mutate_retrace() -> RuleResult:
 
 def mutation_selftest() -> List[RuleResult]:
     """Seed one violation per rule; ``ok`` means the rule FIRED."""
-    return [_mutate_sign(), _mutate_collective(), _mutate_host_transfer(),
-            _mutate_dynamic_shape(), _mutate_retrace()]
+    return [_mutate_sign(), _mutate_policy_sign(), _mutate_collective(),
+            _mutate_host_transfer(), _mutate_dynamic_shape(),
+            _mutate_retrace()]
 
 
 # ---------------------------------------------------------------------------

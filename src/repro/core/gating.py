@@ -119,6 +119,7 @@ class CommsMeter:
 
     bytes_per_request: int
     n_streams: int = 1
+    rate_window: int = 64     # steps retained by the windowed rate gauge
     total_steps: int = 0
     triggered: int = 0        # trigger EVENTS (server consults)
     tokens_shipped: int = 0   # tokens actually sent (drives bytes_sent)
@@ -159,6 +160,13 @@ class CommsMeter:
             self.tokens_seen = np.zeros(self.n_streams, np.int64)
         if self.requests_inflight is None:
             self.requests_inflight = np.zeros(self.n_streams, np.int64)
+        # windowed per-stream trigger-rate gauge: one ring column per
+        # update_per_stream call; cumulative trigger_rate washes out
+        # regime changes, controllers need the recent rate
+        self._ring_events = np.zeros((self.n_streams, self.rate_window), bool)
+        self._ring_seen = np.zeros((self.n_streams, self.rate_window), bool)
+        self._ring_pos = 0
+        self._ring_len = 0
         self._per_stream_used = False
         self._async_used = False
         self._wire_used = False
@@ -190,6 +198,23 @@ class CommsMeter:
         self.tokens_shipped += int(sent.sum())
         self.triggered += int(np.asarray(events).sum())
         self.total_steps += int(seen.sum())
+        # push one ring column (this call ~ one step); the legacy
+        # aggregate update() does not feed the gauge
+        self._ring_events[:, self._ring_pos] = np.asarray(events) > 0
+        self._ring_seen[:, self._ring_pos] = seen > 0
+        self._ring_pos = (self._ring_pos + 1) % self.rate_window
+        self._ring_len = min(self._ring_len + 1, self.rate_window)
+
+    def recent_trigger_rate(self) -> np.ndarray:
+        """(n_streams,) trigger rate over the last ``rate_window``
+        per-stream updates, counting only steps where the stream actually
+        observed a token (detached slots don't dilute their own rate).
+        Unlike the cumulative ``trigger_rate``, this tracks regime
+        changes — it is the comms feedback the threshold controllers in
+        ``serving/policy.py`` consume.  All-cold streams report 0."""
+        ev = self._ring_events.sum(axis=1, dtype=np.int64)
+        seen = self._ring_seen.sum(axis=1, dtype=np.int64)
+        return ev / np.maximum(seen, 1)
 
     # -- async pipelining ----------------------------------------------------
     def record_dispatch(self, mask) -> None:
@@ -317,7 +342,8 @@ class CommsMeter:
         base_b = self.tokens_seen * self.bytes_per_request
         return {"bytes_sent": sent_b,
                 "bytes_baseline": base_b,
-                "reduction_x": base_b / np.maximum(sent_b, 1)}
+                "reduction_x": base_b / np.maximum(sent_b, 1),
+                "recent_trigger_rate": self.recent_trigger_rate()}
 
     def report(self) -> Dict[str, float]:
         rep = {"trigger_rate": self.trigger_rate,

@@ -13,12 +13,18 @@ correction servers behind a routing supervisor
 ``repro.serving.fleet`` — see docs/fleet.md; like ``server`` it is
 imported lazily (its subprocess backend pulls in the launcher).
 Metrics trackers (the per-server heartbeat/stats surface) are in
-``repro.serving.tracker``.
+``repro.serving.tracker``.  Adaptive triggering — per-stream online
+threshold policies (``SessionConfig(policy=...)``) and the three-rung
+``CascadeSession`` — lives in ``repro.serving.policy``; see
+docs/policy.md.
 """
 from repro.serving import async_rpc, collaborative, engine, mesh, tracker, wire  # noqa: F401,E501
 from repro.serving.api import (MonitorSession, SessionConfig,  # noqa: F401
                                TransportSpec)
 from repro.serving.collaborative import CollaborativeEngine  # noqa: F401
+from repro.serving.policy import (BudgetPolicy, CascadeSession,  # noqa: F401
+                                  FixedPolicy, QuantilePolicy,
+                                  TriggerPolicy)
 from repro.serving.tracker import (CompositeTracker, Histogram,  # noqa: F401
                                    InMemoryTracker, JsonFileTracker,
                                    LogTracker, NoopTracker, Tracker)

@@ -168,6 +168,19 @@ class SessionConfig:
                      ``MonitorSession.open`` (an existing engine must
                      already match — ``engine.session`` refuses silent
                      mismatches).
+    policy         — a ``repro.serving.policy.TriggerPolicy``: per-stream
+                     online threshold control.  The session binds it to
+                     the engine's calibrated operating point at open,
+                     reads its (B,) thresholds before every step, and
+                     feeds the step outcome (+ the CommsMeter's windowed
+                     rate gauge) back.  Mutually exclusive with
+                     ``threshold`` — a policy OWNS the trigger point, so
+                     combining them is refused loudly rather than
+                     silently ignoring one.  ``None`` (default): the
+                     fixed calibrated threshold, bit-identical to
+                     pre-policy behavior.  Controller state is
+                     client-held: fleet failover replay preserves it;
+                     ``attach`` cold-starts the slot's controller.
     capacity       — scan mode's static correction capacity.
     monitor_n      — Eq.-8 truncation override for the serving u head.
     trace          — span tracing (``docs/observability.md``): the
@@ -183,6 +196,7 @@ class SessionConfig:
     mode: str = "sync"
     transport: TransportSpec = field(default_factory=TransportSpec)
     max_staleness: int = 1
+    policy: Optional[Any] = None  # TriggerPolicy | None (fixed threshold)
     threshold: Optional[float] = None
     trigger_margin: Optional[float] = None
     capacity: Optional[int] = None
@@ -204,6 +218,23 @@ class SessionConfig:
             raise ValueError("trace_capacity must be >= 1")
         if self.mode == "scan" and self.transport != TransportSpec():
             raise ValueError("scan mode is offline: it takes no transport")
+        if self.policy is not None:
+            if self.threshold is not None:
+                # refuse rather than silently ignore one of them: a
+                # policy OWNS the trigger point (its floor is the
+                # engine's calibrated threshold)
+                raise ValueError(
+                    f"SessionConfig.threshold={self.threshold} and "
+                    f"SessionConfig.policy={type(self.policy).__name__} "
+                    "are mutually exclusive: a policy owns the trigger "
+                    "point (bound to the engine's calibrated operating "
+                    "point at open) — set the operating point via "
+                    "threshold= alone, or let the policy drive it")
+            from repro.serving.policy import TriggerPolicy
+            if not isinstance(self.policy, TriggerPolicy):
+                raise ValueError(
+                    f"SessionConfig.policy must be a TriggerPolicy, got "
+                    f"{type(self.policy).__name__}")
         if self.mesh is not None:
             from repro.serving.mesh import MeshSpec
             object.__setattr__(self, "mesh", MeshSpec.parse(self.mesh))
@@ -244,6 +275,14 @@ class MonitorSession:
         self._check_engine_matches(engine, self.config)
         self._worker = worker
         self._state = "new"
+        # bind the threshold policy to the engine's calibrated operating
+        # point.  Controller state lives HERE (client side, like the
+        # token history): fleet failover replays without touching it.
+        self._policy = self.config.policy
+        if self._policy is not None:
+            self._policy.bind(threshold=engine.m.threshold,
+                              margin=engine.m.trigger_margin,
+                              batch=engine.batch)
         B = engine.batch
         ids = list(range(B)) if streams is None else list(streams)
         if len(ids) > B:
@@ -390,6 +429,10 @@ class MonitorSession:
                 f"slot pool full ({self._engine.batch} slots): detach a "
                 "stream first or build a larger engine")
         self._engine._attach_slot(slot)
+        if self._policy is not None:
+            # fresh tenant -> cold controller: no threshold or evidence
+            # leakage from the slot's previous stream
+            self._policy.reset_stream(slot)
         self._slots[slot] = stream_id
         return slot
 
@@ -457,10 +500,19 @@ class MonitorSession:
                 "scan sessions are offline: use run(token_stream)")
         self._ensure_open()
         full = self._expand(tokens)
+        eng = self._engine
+        if self._policy is not None:
+            # thresholds are data, not structure: writing the vector
+            # never retraces a jitted path (recompile-guard-tested)
+            eng._thr_eff = np.asarray(self._policy.step_thresholds(),
+                                      np.float32)
         if self.config.needs_worker:
-            r = self._engine._step_async(full)
+            r = eng._step_async(full)
         else:
-            r = self._engine._step(full)
+            r = eng._step(full)
+        if self._policy is not None:
+            self._policy.update(r["u"], r["fhat"], r["triggered"],
+                                eng.active.copy(), eng.comms)
         return self._narrow(r)
 
     def stream(self, token_iter: Iterable) -> Iterator[Dict[str, Any]]:
@@ -480,6 +532,12 @@ class MonitorSession:
             self._ensure_open()
             if not self._full_pool():
                 raise RuntimeError("scan mode requires the full slot pool")
+            if self._policy is not None:
+                # offline trace: the policy's CURRENT per-stream
+                # thresholds apply statically (no per-step feedback —
+                # scan is one compiled pass)
+                self._engine._thr_eff = np.asarray(
+                    self._policy.step_thresholds(), np.float32)
             return self._engine._run_scan(token_stream)
         self._ensure_open()
         S = token_stream.shape[1]

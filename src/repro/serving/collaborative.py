@@ -134,6 +134,15 @@ class CollaborativeEngine:
         tok_tail = (cfg.n_codebooks,) if cfg.family == "audio" else ()
         self._history = jnp.zeros((batch, max_len) + tok_tail, jnp.int32)
         self.comms = CommsMeter(bytes_per_request=TOKEN_BYTES, n_streams=batch)
+        # per-stream effective trigger points (serving/policy.py): the
+        # engine triggers stream i when u_i > _thr_eff[i].  Seeded at the
+        # calibrated scalar the comparison always used — with no policy
+        # attached every path is bitwise-identical to the scalar compare.
+        # Thresholds are DATA, not structure: policies mutate this vector
+        # between steps without retracing any jitted path.
+        self._thr_eff = np.full(batch, np.float32(self.m.threshold -
+                                                  self.m.trigger_margin),
+                                np.float32)
         # unified metrics registry (repro/observability): always on — the
         # wire transport feeds its measured RTT breakdown here, and
         # MonitorSession.metrics() snapshots it.  The span tracer is OFF
@@ -304,8 +313,9 @@ class CollaborativeEngine:
         if tr is not None:
             tr.done("edge.decode", "edge", t0, step=self.t)
             t1 = tr.clock()
-        triggered = np.asarray(
-            u > self.m.threshold - self.m.trigger_margin) & active
+        # per-stream effective thresholds (policy-driven; seeded at the
+        # calibrated scalar, so the no-policy compare is bit-identical)
+        triggered = (np.asarray(u) > self._thr_eff) & active
         if tr is not None:
             # the sync point: host readback of the trigger mask
             tr.done("edge.trigger", "edge", t1, step=self.t,
@@ -551,6 +561,11 @@ class CollaborativeEngine:
                                            self._history_sharding)
         self.server_pos[slot] = 0
         self.edge_pos[slot] = 0
+        # a fresh tenant starts at the calibrated operating point; any
+        # policy-raised threshold the previous tenant earned must not
+        # leak (the session also cold-starts its controller state)
+        self._thr_eff[slot] = np.float32(self.m.threshold -
+                                         self.m.trigger_margin)
         if self._dispatcher is not None:
             self._dispatch_pos[slot] = 0
         self.active[slot] = True
@@ -567,12 +582,15 @@ class CollaborativeEngine:
         self.active[slot] = False
 
     # -- offline scan fast path ----------------------------------------------
-    def _scan_impl(self, params, tokens):
+    def _scan_impl(self, params, tokens, thr_eff):
         """One lax.scan over time: edge + server decode in lockstep,
         corrections routed through compact_correction (static capacity).
         Scratch caches are built inside jit (zeros at the engine's max_len
         capacity, so attention reduction widths match the online path
-        bit-for-bit) — no per-call host allocation."""
+        bit-for-bit) — no per-call host allocation.  ``thr_eff``: (B,)
+        f32 per-stream effective trigger points (traced DATA, like the
+        tokens — static-policy scans pass a different vector without
+        retracing)."""
         ecfg = deco.edge_arch(self.cfg)
         cfg, m = self.cfg, self.m
         B = tokens.shape[0]
@@ -594,10 +612,14 @@ class CollaborativeEngine:
                 v = self._v_head(params, buf)
                 return m.s * deco.sigma(v, m.sigma)
 
+            # per-stream trigger points: urgency u - (thr_eff - 0.0) is
+            # bit-identical to the scalar u - (threshold - margin) when
+            # thr_eff is the calibrated f32 (x - 0.0 is an identity in
+            # round-to-nearest f32)
             fhat, served, _ = compact_correction(
-                u, sh.astype(jnp.float32), corrector, m.threshold,
-                m.trigger_margin, self.capacity)
-            trig = u > m.threshold - m.trigger_margin
+                u, sh.astype(jnp.float32), corrector, thr_eff,
+                0.0, self.capacity)
+            trig = u > thr_eff
             return (edge_cache, server_cache, pos + 1), (u, fhat, trig, served)
 
         toks = jnp.moveaxis(tokens, 1, 0)
@@ -622,7 +644,13 @@ class CollaborativeEngine:
             raise ValueError(f"stream longer than max_len={self.max_len}")
         tr = self._tracer
         t0 = tr.clock() if tr is not None else 0.0
-        u, fhat, trig, served = self._scan(self.params, tokens)
+        if B == self.batch:
+            thr_eff = jnp.asarray(self._thr_eff)
+        else:  # narrower offline trace: calibrated point for every row
+            thr_eff = jnp.full((B,), np.float32(self.m.threshold -
+                                                self.m.trigger_margin),
+                               jnp.float32)
+        u, fhat, trig, served = self._scan(self.params, tokens, thr_eff)
         trig_np = np.asarray(trig)
         if tr is not None:
             tr.done("scan.run", "edge", t0, batch=int(B), steps=int(S))

@@ -299,7 +299,7 @@ def shard_engine(engine, spec: Union[str, MeshSpec], *,
         out_shardings=(scsh, d1, d1))
     engine._scan = jax.jit(
         engine._scan_impl,
-        in_shardings=(repl, d1), out_shardings=(d1, d1, d1, d1))
+        in_shardings=(repl, d1, d1), out_shardings=(d1, d1, d1, d1))
 
     engine.mesh = mesh
     engine.mesh_spec = spec

@@ -292,3 +292,53 @@ class TestWireChurn:
                 proc.wait(timeout=10)
             except subprocess.TimeoutExpired:
                 proc.kill()
+
+
+class TestPolicyChurn:
+    def test_reattached_slot_gets_cold_controller(self):
+        """Slot-pool churn under an adaptive policy: the controller is
+        per-tenant state.  Detach a stream whose controller has warmed
+        (tau above the floor, a full evidence window), attach a new
+        tenant into the same slot — the slot's tau must be back at the
+        calibrated floor with zero evidence, while co-resident streams
+        keep their warmed thresholds."""
+        from repro.serving import QuantilePolicy
+        S = 16
+        cfg, params, stream = _setup(threshold=-0.5, length=S)
+        fresh = next(tok.lm_batches(7, cfg, 1, S))["tokens"][0]
+        eng = CollaborativeEngine(params, cfg, batch=3, max_len=32)
+        pol = QuantilePolicy(0.3, window=6, min_samples=3)
+        session = eng.session(SessionConfig(mode="sync", policy=pol),
+                              streams=["a", "b", "c"])
+        with session:
+            for t in range(8):
+                session.step({sid: stream[i, t]
+                              for i, sid in enumerate("abc")})
+            warmed = pol.state()
+            # the controller actually warmed: every stream's window is
+            # full and slot 1 left the floor (threshold -0.5 puts the
+            # 0.7-quantile of u above it)
+            assert (warmed["n_observed"] >= 8).all()
+            assert warmed["tau"][1] > np.float32(warmed["tau0"])
+
+            session.detach("b")
+            session.step({"a": stream[0, 8], "c": stream[2, 8]})
+            tau_a_before = pol.state()["tau"][0]  # a's tau keeps evolving
+            assert session.attach("d") == 1  # same slot re-leased
+
+            cold = pol.state()
+            # cold controller for the new tenant: floor + no evidence...
+            assert cold["tau"][1] == np.float32(cold["tau0"])
+            assert cold["n_observed"][1] == 0
+            # ...and the engine's effective threshold for the slot is
+            # back at the calibrated floor too
+            assert eng._thr_eff[1] == np.float32(cold["tau0"])
+            # no leakage ONTO neighbors: stream a kept its warmed tau
+            assert cold["tau"][0] == tau_a_before
+            assert cold["n_observed"][0] >= 9
+
+            # the new tenant re-warms from ITS OWN stream only
+            for t2 in range(6):
+                session.step({"a": stream[0, 9 + t2], "c": stream[2, 9 + t2],
+                              "d": fresh[t2]})
+            assert pol.state()["n_observed"][1] == 6

@@ -66,3 +66,36 @@ class TestCommsMeter:
         rep = m.report()
         assert rep["bytes_baseline"] == 1000 * 8
         assert rep["bytes_sent"] == 100 * 8
+
+    def test_windowed_rate_tracks_step_cumulative_washes_out(self):
+        """The gauge the threshold controllers consume: after a
+        trigger-rate step (quiet regime -> loud regime),
+        ``recent_trigger_rate`` converges to the NEW rate within one
+        window while the cumulative ``trigger_rate`` stays diluted by
+        the old regime — the two must diverge."""
+        m = CommsMeter(bytes_per_request=8, n_streams=2, rate_window=16)
+        quiet = np.asarray([0, 0], np.int64)
+        loud = np.asarray([1, 0], np.int64)  # stream 0 goes loud, 1 stays
+        seen = np.asarray([1, 1], np.int64)
+        for _ in range(200):
+            m.update_per_stream(quiet, seen)
+        assert m.recent_trigger_rate()[0] == 0.0
+        for _ in range(16):  # one full window of the new regime
+            m.update_per_stream(loud, seen)
+        recent = m.recent_trigger_rate()
+        assert recent[0] == 1.0          # gauge fully on the new rate
+        assert recent[1] == 0.0          # per-stream: neighbor unaffected
+        assert m.trigger_rate < 0.05     # cumulative still near the old one
+        # the gauge also forgets: back to quiet, one window later it's 0
+        for _ in range(16):
+            m.update_per_stream(quiet, seen)
+        assert m.recent_trigger_rate()[0] == 0.0
+
+    def test_windowed_rate_ignores_legacy_aggregate_updates(self):
+        """Only per-stream updates feed the ring: the legacy aggregate
+        ``update()`` has no per-stream attribution to push."""
+        m = CommsMeter(bytes_per_request=8, n_streams=1, rate_window=8)
+        for _ in range(20):
+            m.update(1, 1)
+        assert m.recent_trigger_rate()[0] == 0.0
+        assert m.trigger_rate == 1.0

@@ -1,0 +1,407 @@
+"""Adaptive triggering (serving/policy.py): per-stream online threshold
+policies + the three-rung cascade.
+
+The load-bearing guarantees:
+
+* ``FixedPolicy`` is the regression anchor — bitwise-identical
+  (u/fhat/trigger/comms) to a policy-free session on all four session
+  paths, and bitwise vs ``run_scan``.
+* ``fhat <= u`` survives ANY policy trajectory, adversarial included
+  (hypothesis property) — thresholds only select when the server is
+  consulted, never the corrector's sign.
+* Threshold motion is DATA, not structure: zero new retraces under the
+  recompile guard while a live policy moves every stream's tau.
+* Controller state is per-tenant: attach gives a cold controller.
+* ``SessionConfig`` refuses threshold+policy loudly (bugfix regression).
+* The cascade runs over real wire transports with per-tier comms
+  buckets and ``fhat <= u`` at every rung.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import SPAWN_DEADLINE_S  # noqa: F401  (parity with test_wire)
+from repro.configs import registry
+from repro.core import decomposition as deco
+from repro.core.gating import CommsMeter
+from repro.data import tokens as tok
+from repro.serving import (BudgetPolicy, CascadeSession, FixedPolicy,
+                           MonitorSession, QuantilePolicy, SessionConfig,
+                           TransportSpec, TriggerPolicy)
+from repro.serving.collaborative import CollaborativeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(threshold=0.1, batch=3, length=16):
+    cfg = registry.get_smoke("granite-8b")
+    cfg = cfg.replace(monitor=cfg.monitor.__class__(
+        **{**cfg.monitor.__dict__, "threshold": threshold,
+           "trigger_margin": 0.0}))
+    params = deco.init_collab_lm(KEY, cfg)
+    stream = next(tok.lm_batches(0, cfg, batch, length))["tokens"]
+    return cfg, params, stream
+
+
+_CACHE = {}
+
+
+def _cached_setup():
+    if "s" not in _CACHE:
+        _CACHE["s"] = _setup()
+    return _CACHE["s"]
+
+
+def _engine(cfg, params, batch, max_len):
+    return CollaborativeEngine(params, cfg, batch=batch, max_len=max_len)
+
+
+def _comms_key(rep):
+    return (rep["trigger_rate"], rep["bytes_sent"], rep["bytes_baseline"])
+
+
+# -- config validation (bugfix regression) -----------------------------------
+
+class TestConfigValidation:
+    def test_threshold_plus_policy_refused(self):
+        """The silent-ignore bug: combining an operating-point override
+        with a policy must be a loud error naming BOTH fields."""
+        with pytest.raises(ValueError) as ei:
+            SessionConfig(policy=FixedPolicy(), threshold=0.25)
+        msg = str(ei.value)
+        assert "SessionConfig.threshold" in msg
+        assert "SessionConfig.policy" in msg
+
+    def test_margin_override_alone_still_works_with_policy(self):
+        # trigger_margin is part of the calibrated floor the policy
+        # binds to, not a competing trigger point — not refused
+        SessionConfig(policy=FixedPolicy(), trigger_margin=None)
+
+    def test_non_policy_object_refused(self):
+        with pytest.raises(ValueError, match="TriggerPolicy"):
+            SessionConfig(policy=object())
+
+
+# -- FixedPolicy: the bitwise regression anchor ------------------------------
+
+class TestFixedPolicyBitwise:
+    def test_sync_scan_async_thread_identical(self):
+        """All four session paths: a FixedPolicy session is bitwise
+        (u/fhat/trigger/comms) vs the policy-free session, and sync
+        stays bitwise vs run_scan on u/trigger."""
+        cfg, params, stream = _cached_setup()
+        B, S = stream.shape[:2]
+
+        def run(mk_config):
+            eng = _engine(cfg, params, B, S)
+            r = eng.session(mk_config).run(stream)
+            return {k: np.asarray(r[k]) for k in ("u", "fhat", "triggered")}, \
+                _comms_key(eng.comms.report())
+
+        paths = [
+            ("sync", lambda p: SessionConfig(mode="sync", policy=p)),
+            ("scan", lambda p: SessionConfig(mode="scan", policy=p)),
+            ("async", lambda p: SessionConfig(
+                mode="async", transport="stream", max_staleness=2, policy=p)),
+            ("sync_thread", lambda p: SessionConfig(
+                mode="sync", transport="thread", policy=p)),
+        ]
+        results = {}
+        for name, mk in paths:
+            base, comms_base = run(mk(None))
+            fixed, comms_fixed = run(mk(FixedPolicy()))
+            for k in ("u", "fhat", "triggered"):
+                assert np.array_equal(base[k], fixed[k]), (name, k)
+            if name != "scan":  # scan derives comms from the trace
+                assert comms_base == comms_fixed, name
+            results[name] = fixed
+        # and across paths: u/trigger identical everywhere (fhat matches
+        # exactly between the online paths; scan is allclose — the
+        # compacted corrector sums in a different order)
+        for name in ("scan", "async", "sync_thread"):
+            assert np.array_equal(results["sync"]["u"], results[name]["u"])
+            assert np.array_equal(results["sync"]["triggered"],
+                                  results[name]["triggered"])
+        np.testing.assert_allclose(results["sync"]["fhat"],
+                                   results["scan"]["fhat"], atol=1e-6)
+        assert np.array_equal(results["sync"]["fhat"],
+                              results["sync_thread"]["fhat"])
+
+    def test_zero_retraces_under_moving_policy(self):
+        """Thresholds are data: a QuantilePolicy moving every stream's
+        tau causes zero recompiles after warmup."""
+        cfg, params, stream = _cached_setup()
+        B, S = stream.shape[:2]
+        eng = _engine(cfg, params, B, S)
+        pol = QuantilePolicy(0.3, window=4, min_samples=2)
+        with eng.session(SessionConfig(mode="sync", policy=pol)) as sess:
+            for t in range(4):
+                sess.step(stream[:, t])
+            guard = sess.arm_recompile_guard()
+            for t in range(4, S):
+                sess.step(stream[:, t])
+            guard.assert_stable()
+        # the policy did actually move thresholds (the guard guarded
+        # something real)
+        assert (pol.state()["tau"] != pol.state()["tau0"]).any()
+
+
+# -- safety property: fhat <= u under ANY trajectory -------------------------
+
+class _AdversarialPolicy(TriggerPolicy):
+    """Sets arbitrary per-stream thresholds each step from a seeded RNG
+    — including below the floor (the base class clamps) and wild swings
+    — to model a runaway controller."""
+
+    name = "adversarial"
+
+    def __init__(self, seed, lo=-2.0, hi=2.0):
+        self._rng = np.random.default_rng(seed)
+        self._lo, self._hi = lo, hi
+
+    def _update(self, u, fhat, triggered, active, meter):
+        self._tau[:] = self._rng.uniform(
+            self._lo, self._hi, self._batch).astype(np.float32)
+
+
+class TestSafetyProperty:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           kind=st.sampled_from(["adversarial", "quantile", "budget"]))
+    def test_fhat_bounded_by_u_any_trajectory(self, seed, kind):
+        """Random margin streams x {adversarial, quantile, budget}
+        trajectories: fhat <= u at every step (sign-constrained
+        corrections are threshold-independent)."""
+        cfg, params, _ = _cached_setup()
+        rng = np.random.default_rng(seed)
+        B, S = 3, 10
+        stream = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+        pol = {"adversarial": lambda: _AdversarialPolicy(seed),
+               "quantile": lambda: QuantilePolicy(0.5, window=3,
+                                                  min_samples=1),
+               "budget": lambda: BudgetPolicy(0.2, fn_budget=0.3, window=4,
+                                              min_evidence=1)}[kind]()
+        eng = _engine(cfg, params, B, S)
+        with eng.session(SessionConfig(mode="sync", policy=pol)) as sess:
+            for t in range(S):
+                r = sess.step(stream[:, t])
+                assert (r["fhat"] <= r["u"]).all(), (kind, t)
+
+    def test_floor_is_enforced(self):
+        """Policies may only RAISE above the calibrated floor: even an
+        adversarial subclass writing tau below tau0 is clamped."""
+        pol = _AdversarialPolicy(0, lo=-100.0, hi=-50.0)
+        pol.bind(threshold=0.1, margin=0.0, batch=4)
+        pol.update(np.zeros(4), np.zeros(4), np.zeros(4, bool),
+                   np.ones(4, bool))
+        assert (pol.step_thresholds() >= np.float32(0.1)).all()
+
+
+# -- controllers -------------------------------------------------------------
+
+class TestQuantilePolicy:
+    def test_tracks_per_stream_quantile(self):
+        pol = QuantilePolicy(0.25, window=8, min_samples=4)
+        pol.bind(threshold=0.0, margin=0.0, batch=2)
+        rng = np.random.default_rng(0)
+        u0 = rng.normal(2.0, 0.1, 16)   # stream 0: hot
+        u1 = rng.normal(-1.0, 0.1, 16)  # stream 1: cold (below floor)
+        for a, b in zip(u0, u1):
+            pol.update(np.asarray([a, b], np.float32),
+                       np.asarray([a, b], np.float32),
+                       np.zeros(2, bool), np.ones(2, bool))
+        tau = pol.step_thresholds()
+        assert abs(tau[0] - np.quantile(u0[-8:].astype(np.float32), 0.75)) < 0.2
+        assert tau[1] == np.float32(0.0)  # floored at tau0
+
+    def test_cold_stream_sits_at_floor(self):
+        pol = QuantilePolicy(0.25, window=8, min_samples=6)
+        pol.bind(threshold=0.5, margin=0.1, batch=1)
+        for _ in range(5):  # below min_samples
+            pol.update(np.asarray([3.0]), np.asarray([3.0]),
+                       np.zeros(1, bool), np.ones(1, bool))
+        assert pol.step_thresholds()[0] == np.float32(0.5 - 0.1)
+
+
+class TestBudgetPolicy:
+    def _drive(self, pol, n, *, u=2.0, trig=True, fhat=None):
+        """n identical steps on a 1-stream policy with a live meter."""
+        meter = CommsMeter(bytes_per_request=8, n_streams=1, rate_window=8)
+        for _ in range(n):
+            t = np.asarray([trig])
+            meter.update_per_stream(t.astype(np.int64), np.ones(1, np.int64))
+            pol.update(np.asarray([u], np.float32),
+                       np.asarray([fhat if fhat is not None else u - 1.0],
+                                  np.float32), t, np.ones(1, bool), meter)
+        return pol.step_thresholds()[0]
+
+    def test_raises_when_over_rate_with_healthy_margins(self):
+        pol = BudgetPolicy(0.1, fn_budget=0.9, window=8, min_evidence=2)
+        pol.bind(threshold=0.0, margin=0.0, batch=1)
+        # every step triggers (rate 1.0 > 0.1) and comes back with a
+        # healthy margin (fhat = 1.0 < ... gamma=0 -> margin -1? no:
+        # gamma - fhat = 0 - (-1) = 1 with fhat=-1)
+        tau = self._drive(pol, 12, u=2.0, trig=True, fhat=-1.0)
+        assert tau > np.float32(0.0)
+
+    def test_thin_evidence_decays_to_floor(self):
+        pol = BudgetPolicy(0.1, fn_budget=0.9, window=8, min_evidence=4)
+        pol.bind(threshold=0.0, margin=0.0, batch=1)
+        # raise first with margins in the window
+        self._drive(pol, 12, u=2.0, trig=True, fhat=-1.0)
+        # then a fresh tenant: reset wipes the evidence -> tau pinned
+        # at the floor no matter what u does untriggered
+        pol.reset_stream(0)
+        tau = self._drive(pol, 12, u=2.0, trig=False)
+        assert tau == np.float32(0.0)
+
+    def test_blown_skip_budget_decays(self):
+        pol = BudgetPolicy(0.1, fn_budget=0.2, window=8, min_evidence=2,
+                           step=1.0)
+        pol.bind(threshold=0.0, margin=0.0, batch=1)
+        self._drive(pol, 8, u=2.0, trig=True, fhat=-1.0)
+        raised = pol.step_thresholds()[0]
+        assert raised > np.float32(0.0)
+        # now every candidate is skipped: windowed skip rate -> 1.0 >
+        # fn_budget -> multiplicative decay toward the floor
+        tau = self._drive(pol, 8, u=2.0, trig=False)
+        assert tau < raised
+
+    def test_conservative_motion_is_monotone_decay(self):
+        pol = BudgetPolicy(0.1, fn_budget=0.2, window=8, min_evidence=2,
+                           decay=0.5, step=1.0)
+        pol.bind(threshold=0.0, margin=0.0, batch=1)
+        self._drive(pol, 8, u=2.0, trig=True, fhat=-1.0)
+        taus = [pol.step_thresholds()[0]]
+        for _ in range(6):
+            self._drive(pol, 1, u=2.0, trig=False)
+            taus.append(pol.step_thresholds()[0])
+        diffs = np.diff(np.asarray(taus, np.float64))
+        assert (diffs <= 0).all()          # only toward the floor
+        assert (np.asarray(taus) >= 0).all()  # never below it
+
+
+# -- cascade -----------------------------------------------------------------
+
+def _uds_path(tag):
+    import os
+    import tempfile
+    return os.path.join(tempfile.mkdtemp(prefix=f"policy_{tag}_"), "s.sock")
+
+
+@pytest.fixture(scope="module")
+def two_wire_servers():
+    """TWO in-thread correction servers on their own Unix sockets: the
+    regional (tier-1) and central (tier-2) rungs of the cascade."""
+    from repro.serving.server import CorrectionServer
+    cfg, params, _ = _cached_setup()
+    servers, stops, threads, addrs = [], [], [], []
+    for tag in ("regional", "central"):
+        uds = _uds_path(tag)
+        srv = CorrectionServer(cfg, params, slots=8, max_len=32, uds=uds)
+        stop = threading.Event()
+        th = threading.Thread(target=srv.serve_forever,
+                              kwargs=dict(stop=stop), daemon=True)
+        th.start()
+        servers.append(srv); stops.append(stop)
+        threads.append(th); addrs.append(uds)
+    yield cfg, params, addrs
+    for stop in stops:
+        stop.set()
+    for th, srv in zip(threads, servers):
+        th.join(timeout=10)
+        srv.close()
+
+
+class TestCascade:
+    def _mk(self, cfg, params, stream, *, esc=0.05, escalation=None,
+            transports=(None, None)):
+        B, S = stream.shape[:2]
+
+        def tier(transport):
+            eng = _engine(cfg, params, B, S)
+            if transport is None:
+                return eng.session(SessionConfig(mode="sync"))
+            return eng.session(SessionConfig(
+                mode="sync",
+                transport=TransportSpec("wire", address=transport)))
+        return CascadeSession(tier(transports[0]), tier(transports[1]),
+                              escalate_above=esc, escalation=escalation)
+
+    def test_three_rungs_inproc(self):
+        """Edge -> regional -> central: escalated rows take the tighter
+        corrected score, per-tier buckets account separately, fhat <= u
+        at every rung (asserted inside step; re-checked on the stack)."""
+        cfg, params, stream = _cached_setup()
+        casc = self._mk(cfg, params, stream)
+        out = casc.run(stream)
+        assert (out["fhat"] <= out["u"]).all()
+        assert (out["fhat_tier1"] <= out["u"]).all()
+        assert (out["fhat_tier2"] <= out["u"]).all()
+        # escalated rows carry the min of the two corrected scores
+        esc = out["escalated"]
+        assert esc.any()
+        merged = np.where(esc, np.minimum(out["fhat_tier1"],
+                                          out["fhat_tier2"]),
+                          out["fhat_tier1"])
+        assert np.array_equal(out["fhat"], merged)
+        rep = out["comms"]
+        assert rep["tier1"]["bytes_sent"] > 0
+        assert rep["escalated_steps"] == int(esc.sum())
+        # hop 2 re-ships from the client-held history: real charges in
+        # the tier2 bucket, distinct from tier1's
+        assert rep["tier2"]["bytes_sent"] > 0
+
+    def test_no_escalation_when_residual_clears(self):
+        """An escalation threshold above every residual: tier 2 is never
+        consulted and its bucket stays empty."""
+        cfg, params, stream = _cached_setup()
+        casc = self._mk(cfg, params, stream, esc=1e9)
+        out = casc.run(stream)
+        assert not out["escalated"].any()
+        assert out["comms"]["tier2"]["bytes_sent"] == 0
+        assert np.array_equal(out["fhat"], out["fhat_tier1"])
+
+    def test_membership_is_fixed(self):
+        cfg, params, stream = _cached_setup()
+        casc = self._mk(cfg, params, stream)
+        with pytest.raises(RuntimeError, match="fixed"):
+            casc.attach("x")
+        casc.close()
+
+    def test_tier2_policy_refused(self):
+        cfg, params, stream = _cached_setup()
+        B, S = stream.shape[:2]
+        t1 = _engine(cfg, params, B, S).session(SessionConfig(mode="sync"))
+        t2 = _engine(cfg, params, B, S).session(
+            SessionConfig(mode="sync", policy=FixedPolicy()))
+        with pytest.raises(ValueError, match="cascade drives"):
+            CascadeSession(t1, t2, escalate_above=0.0)
+
+    def test_cascade_over_wire_subprocess_boundary(self, two_wire_servers):
+        """Acceptance: the three-rung cascade end-to-end over REAL wire
+        transports — both hops cross sockets to their own correction
+        server, each metered in its own tier bucket, fhat <= u at every
+        rung.  The escalation policy here is a QuantilePolicy on the
+        tier-1 residual (the regional tier's margin drives its own
+        escalation budget)."""
+        cfg, params, addrs = two_wire_servers
+        _, _, stream = _cached_setup()
+        esc_pol = QuantilePolicy(0.5, window=6, min_samples=3)
+        casc = self._mk(cfg, params, stream, esc=0.05, escalation=esc_pol,
+                        transports=tuple(addrs))
+        out = casc.run(stream)
+        assert (out["fhat"] <= out["u"]).all()
+        assert (out["fhat_tier1"] <= out["u"]).all()
+        assert (out["fhat_tier2"] <= out["u"]).all()
+        assert out["escalated"].any()
+        rep = out["comms"]
+        # both hops really crossed their own socket
+        assert rep["tier1"]["wire"]["tx_bytes"] > 0
+        assert rep["tier2"]["wire"]["tx_bytes"] > 0
+        assert rep["tier1"]["bytes_sent"] > 0
+        assert rep["tier2"]["bytes_sent"] > 0
